@@ -1,0 +1,83 @@
+"""Shared benchmark infrastructure: sized settings + in-process caches.
+
+Every table benchmark goes through ``get_predictor`` so a predictor trained
+for Table II is reused by Tables III/IV/scheduling/cross-model without
+retraining (single-core container budget).
+
+FAST mode (default) uses reduced corpus/epoch sizes; ``--full`` restores the
+paper-scale protocol (5 epochs etc.). Sizes are recorded in every output row.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.predictor import (PredictorConfig, TrainSettings,
+                                  evaluate_tau, train_predictor)
+from repro.data.synthetic import MODELS, make_corpus, sample_lengths
+
+FAST = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
+
+
+@dataclass(frozen=True)
+class BenchScale:
+    n_train: int
+    n_test: int
+    epochs: int
+    pairs_per_epoch: int
+    burst: int
+    sweep_requests: int
+
+
+def scale() -> BenchScale:
+    if FAST:
+        return BenchScale(n_train=1500, n_test=400, epochs=2,
+                          pairs_per_epoch=2560, burst=2000,
+                          sweep_requests=600)
+    return BenchScale(n_train=8000, n_test=1500, epochs=5,
+                      pairs_per_epoch=6400, burst=2000, sweep_requests=2000)
+
+
+@functools.lru_cache(maxsize=None)
+def corpus(dataset: str, split: str):
+    sc = scale()
+    if split == "train":
+        return make_corpus(dataset, sc.n_train, seed=0)
+    return make_corpus(dataset, sc.n_test, seed=424242)
+
+
+@functools.lru_cache(maxsize=None)
+def lengths(dataset: str, split: str, model: str):
+    run_seed = 0 if split == "train" else 9
+    return sample_lengths(corpus(dataset, split), model, run_seed=run_seed)
+
+
+@functools.lru_cache(maxsize=None)
+def get_predictor(dataset: str, model: str, method: str = "pairwise",
+                  backbone: str = "bert", delta: float = -1.0):
+    """Train (or fetch cached) predictor. delta=-1 → the model's paper δ."""
+    sc = scale()
+    if delta < 0:
+        delta = MODELS[model].delta
+    st = TrainSettings(method=method, epochs=sc.epochs,
+                       pairs_per_epoch=sc.pairs_per_epoch, delta=delta)
+    t0 = time.perf_counter()
+    pred = train_predictor(corpus(dataset, "train").prompts,
+                           lengths(dataset, "train", model),
+                           backbone=backbone, settings=st)
+    pred.train_seconds = time.perf_counter() - t0
+    return pred
+
+
+def tau_of(pred, dataset: str, model: str) -> float:
+    return evaluate_tau(pred, corpus(dataset, "test").prompts,
+                        lengths(dataset, "test", model))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The repo-wide CSV row convention: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

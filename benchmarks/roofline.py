@@ -1,0 +1,57 @@
+"""§Roofline deliverable: aggregate dry-run JSON artifacts into the
+per-(arch × shape × mesh) roofline table (terms in seconds, bottleneck,
+MODEL_FLOPS ratio). Artifacts come from:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+        --out results/dryrun_baseline
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from benchmarks.common import emit
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun_baseline")
+
+
+def load(dirpath: str = DEFAULT_DIR):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def run(dirpath: str = DEFAULT_DIR) -> None:
+    t0 = time.perf_counter()
+    rows = load(dirpath)
+    if not rows:
+        print(f"# roofline: no dry-run artifacts in {dirpath} — run "
+              "repro.launch.dryrun first")
+        emit("roofline", 0.0, "no artifacts")
+        return
+    print("# Roofline table (derived from compiled dry-run artifacts)")
+    print(f"{'arch':22s} {'shape':12s} {'mesh':10s} {'compute':>10s} "
+          f"{'memory':>10s} {'collective':>11s} {'bottleneck':>11s} "
+          f"{'useful':>7s} {'GB/dev':>8s}")
+    counts = {}
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        if r.get("skipped"):
+            continue
+        counts[r["bottleneck"]] = counts.get(r["bottleneck"], 0) + 1
+        gb = r.get("memory_gb_per_device")
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:10s} "
+              f"{r['t_compute'] * 1e3:9.2f}ms {r['t_memory'] * 1e3:9.2f}ms "
+              f"{r['t_collective'] * 1e3:10.2f}ms {r['bottleneck']:>11s} "
+              f"{r['useful_fraction']:7.1%} "
+              f"{gb if gb is None else round(gb, 1):>8}")
+    us = (time.perf_counter() - t0) * 1e6
+    emit("roofline", us, f"{len(rows)} combos; bottlenecks={counts}")
+
+
+if __name__ == "__main__":
+    run()

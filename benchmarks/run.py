@@ -1,0 +1,59 @@
+"""Benchmark driver — one function per paper table/figure (deliverable (d)).
+
+    PYTHONPATH=src python -m benchmarks.run            # fast mode
+    REPRO_BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --only table2 scheduling
+
+Each benchmark prints its table and a ``name,us_per_call,derived`` CSV row.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = ("table1", "table2", "table3", "table4", "scheduling",
+           "cross_model", "pars_plus", "starvation", "kernels", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help=f"subset of {BENCHES}")
+    args = ap.parse_args()
+    selected = args.only or BENCHES
+
+    from benchmarks import (cross_model, kernel_bench, pars_plus_ablation,
+                            roofline, scheduling_latency, starvation_sweep,
+                            table1_variability, table2_rank_methods,
+                            table3_backbones, table4_filtering)
+    runners = {
+        "table1": table1_variability.run,
+        "table2": table2_rank_methods.run,
+        "table3": table3_backbones.run,
+        "table4": table4_filtering.run,
+        "scheduling": scheduling_latency.run,
+        "cross_model": cross_model.run,
+        "pars_plus": pars_plus_ablation.run,
+        "starvation": starvation_sweep.run,
+        "kernels": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    t0 = time.perf_counter()
+    failures = []
+    for name in selected:
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
+        try:
+            runners[name]()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    print(f"\ntotal benchmark wall time: {time.perf_counter() - t0:.0f}s")
+    if failures:
+        print(f"FAILED benches: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

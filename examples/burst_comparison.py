@@ -1,0 +1,56 @@
+"""Paper §IV-D at full burst scale: 2000 simultaneous requests, five policies,
+avg + p90 per-token latency (simulator; see serve_e2e.py for the real engine).
+
+    PYTHONPATH=src python examples/burst_comparison.py [--model r1]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core.predictor import TrainSettings, train_predictor
+from repro.core.scheduler.policies import fcfs, make_policy, oracle_sjf
+from repro.data.synthetic import MODELS, make_corpus, sample_lengths
+from repro.data.workload import burst_arrivals, make_requests
+from repro.serving.simulator import run_policy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="llama", choices=list(MODELS))
+    ap.add_argument("--dataset", default="alpaca")
+    ap.add_argument("--n", type=int, default=2000)
+    args = ap.parse_args()
+
+    train_c = make_corpus(args.dataset, 1500, seed=0)
+    L_train = sample_lengths(train_c, args.model)
+    delta = MODELS[args.model].delta
+    preds = {}
+    for method in ("pairwise", "pointwise", "listwise"):
+        preds[method] = train_predictor(
+            train_c.prompts, L_train,
+            settings=TrainSettings(method=method, epochs=2,
+                                   pairs_per_epoch=2560, delta=delta))
+
+    test_c = make_corpus(args.dataset, args.n, seed=5)
+    L = sample_lengths(test_c, args.model, run_seed=2)
+    reqs = make_requests(test_c, L, burst_arrivals(args.n))
+
+    print(f"\n{args.dataset}/{args.model}: burst n={args.n}, batch=16")
+    reports = {}
+    for name, pol in [
+        ("fcfs", fcfs()),
+        ("pointwise", make_policy("pointwise", preds["pointwise"])),
+        ("listwise", make_policy("listwise", preds["listwise"])),
+        ("pars", make_policy("pars", preds["pairwise"])),
+        ("oracle", oracle_sjf()),
+    ]:
+        reports[name] = run_policy(reqs, pol, max_batch=16)
+        print("  " + reports[name].row())
+    f, p = reports["fcfs"], reports["pars"]
+    print(f"\nPARS speedup vs FCFS: avg "
+          f"{f.avg_per_token_latency / p.avg_per_token_latency:.2f}x, p90 "
+          f"{f.p90_per_token_latency / p.p90_per_token_latency:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""PARS core: pairwise learning-to-rank predictor + predictor-guided scheduler."""

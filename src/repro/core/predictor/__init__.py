@@ -1,0 +1,8 @@
+"""Ranking predictor (paper §III-A): backbones, losses, pairing, training."""
+from repro.core.predictor.backbones import BACKBONES, PredictorConfig, init_predictor, predictor_forward
+from repro.core.predictor.losses import l1_pointwise_loss, listmle_loss, margin_ranking_loss
+from repro.core.predictor.metrics import kendall_tau_b
+from repro.core.predictor.pairing import DELTA_INSTRUCT, DELTA_REASONING, build_pairs, min_length_difference
+from repro.core.predictor.tokenizer import HashTokenizer
+from repro.core.predictor.train import (METHODS, RankingPredictor, TrainSettings,
+                                        evaluate_tau, train_predictor)

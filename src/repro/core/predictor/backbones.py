@@ -1,0 +1,122 @@
+"""Mini Transformer backbones for the ranking predictor: BERT / OPT / T5.
+
+Reproduces the paper's Table III backbone comparison at laptop scale
+(DESIGN.md §8): the *method* — encode prompt → pooled feature → linear scalar
+score — is identical; the backbones are trained from scratch.
+
+* ``bert`` — bidirectional encoder; feature = tanh(W·h[CLS]) (BERT pooler).
+* ``opt``  — causal decoder; feature = hidden of the last non-pad token.
+* ``t5``   — encoder + one-query attention-pooling "decoder" (mini analogue
+  of T5's enc-dec readout).
+
+All backbones share one stacked-layer transformer body (lax.scan).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.predictor.tokenizer import PAD
+from repro.models.attention import attention_naive
+from repro.models.common import dense_init, embed_init
+
+PyTree = Any
+
+BACKBONES = ("bert", "opt", "t5")
+
+
+@dataclass(frozen=True)
+class PredictorConfig:
+    """Defaults sized for the 1-core CPU container (DESIGN.md §8): the paper
+    uses BERT-base (110M); the method is scale-free, so the repro default is a
+    ~0.4M-param mini. Pass a larger config on real hardware."""
+    backbone: str = "bert"
+    vocab_size: int = 2048
+    max_len: int = 32
+    d_model: int = 64
+    num_heads: int = 2
+    num_layers: int = 2
+    d_ff: int = 192
+
+
+def _init_block(key, cfg: PredictorConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, d)), "wk": dense_init(ks[1], (d, d)),
+        "wv": dense_init(ks[2], (d, d)), "wo": dense_init(ks[3], (d, d)),
+        "w1": dense_init(ks[4], (d, f)), "w2": dense_init(ks[5], (f, d), in_axis_size=f),
+        "ln1": jnp.ones((d,)), "ln1b": jnp.zeros((d,)),
+        "ln2": jnp.ones((d,)), "ln2b": jnp.zeros((d,)),
+    }
+
+
+def init_predictor(key, cfg: PredictorConfig) -> PyTree:
+    ks = jax.random.split(key, 6)
+    p = {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model)),
+        "pos": embed_init(ks[1], (cfg.max_len, cfg.d_model)),
+        "layers": jax.vmap(lambda k: _init_block(k, cfg))(
+            jax.random.split(ks[2], cfg.num_layers)),
+        "ln_f": jnp.ones((cfg.d_model,)), "ln_fb": jnp.zeros((cfg.d_model,)),
+        "head": dense_init(ks[3], (cfg.d_model, 1)),
+    }
+    if cfg.backbone == "bert":
+        p["pooler"] = dense_init(ks[4], (cfg.d_model, cfg.d_model))
+    if cfg.backbone == "t5":
+        p["pool_query"] = embed_init(ks[5], (1, cfg.d_model))
+    return p
+
+
+def _ln(x, scale, bias):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias).astype(x.dtype)
+
+
+def _body(cfg: PredictorConfig, x, pos_kv, positions, causal):
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+
+    def block(x, lp):
+        b, s, d = x.shape
+        xn = _ln(x, lp["ln1"], lp["ln1b"])
+        q = (xn @ lp["wq"]).reshape(b, s, h, dh)
+        k = (xn @ lp["wk"]).reshape(b, s, h, dh)
+        v = (xn @ lp["wv"]).reshape(b, s, h, dh)
+        att = attention_naive(q, k, v, positions, pos_kv, causal=causal)
+        x = x + att.reshape(b, s, d) @ lp["wo"]
+        xn = _ln(x, lp["ln2"], lp["ln2b"])
+        x = x + jax.nn.gelu(xn @ lp["w1"]) @ lp["w2"]
+        return x, None
+    return block
+
+
+def predictor_forward(params: PyTree, cfg: PredictorConfig,
+                      tokens: jax.Array) -> jax.Array:
+    """tokens: (B, T) int32 → scores (B,) f32. Higher = longer expected output."""
+    b, t = tokens.shape
+    pad_mask = tokens != PAD
+    x = params["embed"][tokens] + params["pos"][None, :t]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    pos_kv = jnp.where(pad_mask, positions, -1)      # PAD slots masked out
+    causal = cfg.backbone == "opt"
+    x, _ = jax.lax.scan(_body(cfg, x, pos_kv, positions, causal),
+                        x, params["layers"])
+    x = _ln(x, params["ln_f"], params["ln_fb"])
+
+    if cfg.backbone == "bert":
+        feat = jnp.tanh(x[:, 0] @ params["pooler"])          # [CLS] pooler
+    elif cfg.backbone == "opt":
+        last = jnp.maximum(jnp.sum(pad_mask, -1) - 1, 0)     # last real token
+        feat = x[jnp.arange(b), last]
+    else:  # t5: one-query attention pooling over encoder states
+        q = jnp.broadcast_to(params["pool_query"][None], (b, 1, cfg.d_model))
+        scores = jnp.einsum("bqd,btd->bqt", q, x) / jnp.sqrt(cfg.d_model)
+        scores = jnp.where(pad_mask[:, None], scores, -1e30)
+        feat = jnp.einsum("bqt,btd->bqd", jax.nn.softmax(scores, -1), x)[:, 0]
+    return (feat @ params["head"])[:, 0].astype(jnp.float32)

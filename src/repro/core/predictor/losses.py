@@ -1,0 +1,40 @@
+"""Learning-to-rank losses: margin-ranking (PARS), L1 pointwise, ListMLE.
+
+The margin ranking loss is the paper's eq. in §III-A:
+    L(s_A, s_B, y) = max(0, -y · (s_A - s_B) + margin),   margin = 1.0
+with y = +1 when prompt A's response is expected to be *longer*.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+POINTWISE_SCALE = 100.0  # tokens per score unit — a practitioner-reasonable
+# normalization for instruct-length outputs; reasoning-length outliers then
+# dominate the L1 objective, which is exactly the pointwise failure mode the
+# paper exploits (§II, Table II)
+
+
+def margin_ranking_loss(s_a: jax.Array, s_b: jax.Array, y: jax.Array,
+                        margin: float = 1.0) -> jax.Array:
+    """Paper §III-A. s_a/s_b: (B,) scores; y: (B,) in {+1, -1}."""
+    return jnp.mean(jnp.maximum(0.0, -y * (s_a - s_b) + margin))
+
+
+def l1_pointwise_loss(scores: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Pointwise SJF baseline [Qiu et al.]: regression with L1 loss on the
+    response length (scaled — τ_b only depends on ordering)."""
+    return jnp.mean(jnp.abs(scores - lengths.astype(jnp.float32)
+                            / POINTWISE_SCALE))
+
+
+def listmle_loss(scores: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Listwise SJF baseline [Fu et al., ListMLE]: negative log-likelihood of
+    the ground-truth descending-length permutation under the Plackett-Luce
+    model. scores/lengths: (B, L) — B lists of L items."""
+    order = jnp.argsort(-lengths, axis=-1)                 # longest first
+    s = jnp.take_along_axis(scores, order, axis=-1)        # (B, L)
+    # log P = Σ_i [ s_i − logsumexp(s_i..s_L) ]  (suffix logsumexp)
+    rev = s[:, ::-1]
+    suffix_lse = jax.lax.cumlogsumexp(rev, axis=1)[:, ::-1]
+    return -jnp.mean(jnp.sum(s - suffix_lse, axis=-1))

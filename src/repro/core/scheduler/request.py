@@ -1,0 +1,39 @@
+"""Request lifecycle shared by the real engine and the simulator."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: str
+    arrival_time: float
+    prompt_len: int                   # prefill tokens
+    true_length: int                  # ground-truth decode tokens (completion)
+    score: float = 0.0                # predictor score (higher = longer)
+    state: RequestState = RequestState.WAITING
+    # runtime bookkeeping
+    start_time: Optional[float] = None        # admitted to running queue
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    tokens_done: int = 0
+    boosted: bool = False                     # starvation-prevention flag
+    preempt_count: int = 0                    # recompute-preemption evictions
+
+    @property
+    def finished(self) -> bool:
+        return self.tokens_done >= self.true_length
+
+    def per_token_latency(self) -> float:
+        """End-to-end latency / output length (the paper's metric, §IV)."""
+        assert self.finish_time is not None
+        return (self.finish_time - self.arrival_time) / max(self.true_length, 1)

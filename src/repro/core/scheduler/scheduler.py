@@ -1,0 +1,135 @@
+"""Predictor-guided continuous-batching scheduler (paper §III-B).
+
+vLLM-style two-queue structure:
+
+* **Waiting queue (W)** — arrived, not yet executing. Re-ranked every
+  scheduling cycle by the policy's priority key (ascending).
+* **Running queue (R)** — currently in the engine's batch, capacity
+  ``max_batch``. Under continuous batching, finished requests are replaced
+  at iteration granularity; under static batching a whole batch must drain
+  before W is consulted again.
+
+Starvation prevention (paper default 2 minutes): any waiting request whose
+wait time exceeds ``starvation_threshold`` has its priority boosted — boosted
+requests are scheduled ahead of everything else, FIFO among themselves.
+
+This object is shared verbatim by the real JAX engine and the discrete-event
+simulator; only the clock source differs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.core.scheduler.policies import Policy
+from repro.core.scheduler.request import Request, RequestState
+
+DEFAULT_STARVATION_S = 120.0
+
+
+@dataclass
+class Scheduler:
+    policy: Policy
+    max_batch: int = 16
+    starvation_threshold: float = DEFAULT_STARVATION_S
+    continuous: bool = True            # False = static batching
+    # vLLM-style recompute preemption (beyond-paper, off by default): when R
+    # is full and a waiting request's priority key undercuts a running one by
+    # more than ``preempt_margin``, the worst running request is evicted back
+    # to W (losing its KV cache — on re-admission it re-prefills prompt +
+    # already-generated tokens, which the simulator charges). Bounded per
+    # request by ``max_preemptions`` to prevent thrash; boosted requests are
+    # never preempted.
+    preemption: bool = False
+    preempt_margin: float = 0.0
+    max_preemptions: int = 2
+    waiting: List[Request] = field(default_factory=list)
+    running: List[Request] = field(default_factory=list)
+
+    # ------------------------------------------------------------------ API
+    def add_request(self, req: Request) -> None:
+        self.policy.annotate([req])
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+
+    def add_requests(self, reqs: List[Request]) -> None:
+        self.policy.annotate(reqs)
+        for r in reqs:
+            r.state = RequestState.WAITING
+        self.waiting.extend(reqs)
+
+    def _boost(self, now: float) -> None:
+        for r in self.waiting:
+            if not r.boosted and now - r.arrival_time > self.starvation_threshold:
+                r.boosted = True
+
+    def _rank(self) -> None:
+        """Sort W: boosted first (FIFO among them), then policy key, then
+        arrival (stable tiebreak)."""
+        self.waiting.sort(
+            key=lambda r: ((0, r.arrival_time, 0.0) if r.boosted
+                           else (1, self.policy.key(r), r.arrival_time)))
+
+    def schedule(self, now: float) -> List[Request]:
+        """One scheduling cycle: move top-ranked W → R up to capacity.
+
+        Returns the newly admitted requests (engine must prefill them).
+        Under static batching, admission only happens when R is empty.
+        """
+        self.retire_finished(now)
+        if not self.continuous and self.running:
+            return []
+        if self.preemption and self.waiting:
+            self._boost(now)
+            self._rank()
+            self._preempt()
+        free = self.max_batch - len(self.running)
+        if free <= 0 or not self.waiting:
+            return []
+        self._boost(now)
+        self._rank()
+        admitted = self.waiting[:free]
+        del self.waiting[:free]
+        for r in admitted:
+            r.state = RequestState.RUNNING
+            r.start_time = now
+        self.running.extend(admitted)
+        return admitted
+
+    def _preempt(self) -> None:
+        """Evict worst-running in favour of strictly-better waiting requests
+        (requires self.waiting already ranked)."""
+        while len(self.running) >= self.max_batch and self.waiting:
+            cand = self.waiting[0]
+            if cand.boosted:
+                victim_pool = [r for r in self.running if not r.boosted]
+            else:
+                victim_pool = self.running
+            victims = [r for r in victim_pool
+                       if getattr(r, "preempt_count", 0) < self.max_preemptions]
+            if not victims:
+                return
+            victim = max(victims, key=self.policy.key)
+            if (cand.boosted and not victim.boosted) or (
+                    self.policy.key(cand) + self.preempt_margin
+                    < self.policy.key(victim)):
+                self.running.remove(victim)
+                victim.state = RequestState.WAITING
+                victim.preempt_count = getattr(victim, "preempt_count", 0) + 1
+                self.waiting.append(victim)
+                self._rank()
+            else:
+                return
+
+    def retire_finished(self, now: float) -> List[Request]:
+        done = [r for r in self.running if r.finished]
+        for r in done:
+            r.state = RequestState.FINISHED
+            if r.finish_time is None:
+                r.finish_time = now
+        self.running = [r for r in self.running if not r.finished]
+        return done
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)

@@ -1,0 +1,3 @@
+"""Data pipeline: synthetic corpus/length oracle + workload arrival processes."""
+from repro.data.synthetic import (DATASETS, MODELS, Corpus, EXAMPLE_PROMPTS,
+                                  LLMProfile, make_corpus, prompt_lengths, sample_lengths)

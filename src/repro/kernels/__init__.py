@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the serving substrate's compute hot-spots.
+
+The paper's contribution is scheduling (no kernel novelty); these kernels are
+the perf-critical layers of the serving stack it plugs into, TPU-adapted per
+DESIGN.md §4. Each subpackage ships kernel.py (pl.pallas_call + BlockSpec
+VMEM tiling), ops.py (jitted wrapper), ref.py (pure-jnp oracle):
+
+  flash_prefill  — causal GQA flash attention (training / prefill)
+  flash_decode   — one-token decode over a (ring) KV cache, online softmax
+  rwkv6_chunk    — chunked linear attention with data-dependent decay
+                   (RWKV-6 "rwkv" mode + Mamba-2/SSD "ssd" mode)
+"""

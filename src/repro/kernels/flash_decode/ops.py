@@ -1,0 +1,49 @@
+"""Jitted public wrapper for flash_decode: ring-mask construction + padding.
+
+``decode_attention_pallas`` mirrors the signature of
+``repro.models.attention.decode_attention`` (its XLA twin) so the two are
+drop-in interchangeable behind the model's ``attn_impl`` switch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode, NEG_INF
+from repro.models.attention import ring_slot_positions
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, pos: jax.Array, *,
+                            window: Optional[int] = None, block_k: int = 512,
+                            interpret: bool = True) -> jax.Array:
+    """q: (B, H, dh); caches: (B, W, KH, dh); pos: scalar → (B, H, dh)."""
+    b, h, dh = q.shape
+    w, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+
+    slot_pos = ring_slot_positions(jnp.asarray(pos) + 1, w)   # (W,)
+    valid = slot_pos >= 0
+    if window is not None:
+        valid &= pos - slot_pos < window
+    valid &= slot_pos <= pos
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    bias = jnp.broadcast_to(bias[None], (b, w))
+
+    qg = q.reshape(b, kh, g, dh)
+    kc = k_cache.transpose(0, 2, 1, 3)                        # (B, KH, W, dh)
+    vc = v_cache.transpose(0, 2, 1, 3)
+
+    bk = min(block_k, w)
+    pad = (-w) % bk
+    if pad:
+        kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=NEG_INF)
+
+    out = flash_decode(qg, kc, vc, bias, block_k=bk, interpret=interpret)
+    return out.reshape(b, h, dh)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the flash_decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     bias: jax.Array) -> jax.Array:
+    """q: (B, KH, G, dh); caches: (B, KH, W, dh); bias: (B, W)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bhgd,bhwd->bhgw", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * dh ** -0.5
+    s = s + bias[:, None, None, :].astype(jnp.float32)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgw,bhwd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.flash_prefill.kernel import *  # noqa

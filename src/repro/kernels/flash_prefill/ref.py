@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash_prefill kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True,
+                      window: Optional[int] = None) -> jax.Array:
+    """q: (B, H, Sq, dh); k/v: (B, KH, Skv, dh) → (B, H, Sq, dh). f32 math."""
+    b, h, sq, dh = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    qpk = h // kh
+    k = jnp.repeat(k, qpk, axis=1)
+    v = jnp.repeat(v, qpk, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    q_idx = jnp.arange(sq)[:, None]
+    k_idx = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_idx <= q_idx
+    if window is not None:
+        mask &= q_idx - k_idx < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.rwkv6_chunk.kernel import *  # noqa

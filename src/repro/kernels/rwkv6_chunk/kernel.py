@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: chunked linear attention with data-dependent decay.
+
+Serves both RWKV-6 time-mix (vector decay + bonus-u, ``mode="rwkv"``) and
+Mamba-2/SSD (scalar decay broadcast to the k-dim, ``mode="ssd"``) — the same
+recurrences as ``repro.models.linear_attn`` (the oracle).
+
+TPU adaptation of the recurrent GPU kernel (DESIGN.md §4): instead of one
+thread-block per head scanning tokens, the grid is
+(batch, heads, T/chunk) with the chunk axis innermost and *sequential*; the
+(dk × dv) state is f32 VMEM scratch carried across chunk steps. Each step does
+three (C×d)·(d×C|d) MXU matmuls (intra-chunk attention, state read, state
+update) on VMEM-resident tiles — chunk=64, d=64..128 keeps everything in a few
+hundred KiB of VMEM.
+
+NUMERICS CONTRACT (same as the oracle): per-step log-decay ∈ [-1, 0); with
+chunk ≤ 80 the intra-chunk exponentials stay in f32 range.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(q_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state_scr, *,
+                 chunk: int, mode: str):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    qc = q_ref[0, 0].astype(jnp.float32)        # (C, dk)
+    kc = k_ref[0, 0].astype(jnp.float32)
+    vc = v_ref[0, 0].astype(jnp.float32)        # (C, dv)
+    lw = lw_ref[0, 0].astype(jnp.float32)       # (C, dk)
+    u = u_ref[0].astype(jnp.float32)            # (dk,)
+
+    inc = jnp.cumsum(lw, axis=0)                # inclusive prefix Σ log w
+    exc = inc - lw
+    tot = inc[-1:, :]                           # (1, dk)
+
+    q_dec = qc * jnp.exp(exc if mode == "rwkv" else inc)
+    k_dec = kc * jnp.exp(-inc)
+    k_tail = kc * jnp.exp(tot - inc)
+
+    state = state_scr[...]                      # (dk, dv)
+    inter = jnp.dot(q_dec, state)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+    att = jax.lax.dot_general(q_dec, k_dec, (((1,), (1,)), ((), ()))) * tri
+    diag = jnp.sum(qc * u[None, :] * kc, axis=-1, keepdims=True)
+    out = inter + jnp.dot(att, vc) + diag * vc
+
+    state_scr[...] = (state * jnp.exp(tot).T
+                      + jax.lax.dot_general(k_tail, vc, (((0,), (0,)), ((), ()))))
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def rwkv6_chunk(q: jax.Array, k: jax.Array, v: jax.Array, log_decay: jax.Array,
+                bonus: jax.Array, *, chunk: int = 64, mode: str = "rwkv",
+                interpret: bool = True) -> jax.Array:
+    """q/k/lw: (B, H, T, dk); v: (B, H, T, dv); bonus: (H, dk) → (B, H, T, dv).
+
+    T must be a multiple of ``chunk`` (ops.py pads). For ``mode="ssd"`` pass
+    ``bonus=ones`` (the diag term is (q·k) with no decay).
+    """
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    n_c = t // chunk
+    grid = (b, h, n_c)
+    kernel = functools.partial(_rwkv_kernel, chunk=chunk, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, dk), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk, dk), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk, dv), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk, dk), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, dk), lambda b_, h_, c: (h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, dv), lambda b_, h_, c: (b_, h_, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dv), q.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_decay, bonus)

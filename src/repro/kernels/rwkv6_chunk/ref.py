@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for rwkv6_chunk: token-by-token recurrence (no chunking).
+
+Deliberately independent of the chunked algorithm — a direct lax.scan over
+tokens implementing the published recurrences, so kernel and model-level
+chunked math are both validated against first principles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_recurrent_ref(q, k, v, log_decay, bonus, *, mode: str = "rwkv"):
+    """Same signature/shapes as the kernel; scans one token at a time."""
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    lw = jnp.broadcast_to(log_decay.astype(jnp.float32), (b, h, t, dk))
+    uf = bonus.astype(jnp.float32)
+
+    def step(state, xs):
+        qt, kt, vt, lwt = xs                         # (B,H,dk|dv)
+        outer = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        if mode == "rwkv":
+            out = (jnp.einsum("bhd,bhde->bhe", qt, state)
+                   + jnp.sum(qt * uf[None] * kt, -1, keepdims=True) * vt)
+            state = state * jnp.exp(lwt)[..., None] + outer
+        else:
+            state = state * jnp.exp(lwt)[..., None] + outer
+            out = jnp.einsum("bhd,bhde->bhe", qt, state)
+        return state, out
+
+    s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    xs = tuple(x.transpose(2, 0, 1, 3) for x in (qf, kf, vf, lw))
+    _, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 2, 0, 3).astype(q.dtype)

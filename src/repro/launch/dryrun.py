@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh) combo.
+
+The two lines above MUST stay the first statements in this module — JAX locks
+the device count at first initialization, and the production meshes need 512
+placeholder host devices (deliverable (e)).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+        --out results/dryrun
+Each run prints memory_analysis / cost_analysis and (optionally) writes a
+JSON artifact consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+
+from repro.configs import (ARCH_IDS, INPUT_SHAPES, canon, config_for_shape,
+                           get_config, shape_applicable)
+from repro.launch.analysis import analyze, model_flops_estimate
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+from repro.models.model import batch_spec, decode_specs
+from repro.sharding.annotate import DEFAULT_RULES, logical_axis_rules
+from repro.sharding.specs import (batch_specs, decode_cache_specs,
+                                  param_specs, replicated)
+from repro.training.optimizer import Adam
+from repro.training.train_loop import make_train_step
+
+
+def _params_shape(cfg):
+    return jax.eval_shape(partial(tfm.init_params, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                attn_impl: str = "chunked", remat: str = "full",
+                kv_shard: str = "heads", moe_group: int = None,
+                microbatch: int = 1, donate: bool = False,
+                decode_params: str = "fsdp"):
+    """Lower + compile one (arch, shape, mesh). Returns (compiled, meta)."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    if not shape_applicable(cfg, shape):
+        return None, {"skipped": True,
+                      "reason": "long_500k inapplicable (DESIGN.md §5)"}
+    cfg = config_for_shape(cfg, shape)
+    if moe_group and cfg.moe is not None:
+        cfg = cfg.replace(moe=cfg.moe.__class__(
+            **{**cfg.moe.__dict__, "group_size": moe_group}))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+
+    p_shape = _params_shape(cfg)
+    p_specs = param_specs(p_shape, mesh,
+                          fsdp=not (decode_params == "tp"
+                                    and shape.kind == "decode"))
+
+    with mesh, logical_axis_rules(mesh, DEFAULT_RULES):
+        if shape.kind == "train":
+            opt = Adam(learning_rate=1e-4, clip_norm=1.0)
+            o_shape = jax.eval_shape(opt.init, p_shape)
+            o_specs = param_specs(o_shape.mu, mesh)
+            opt_specs = type(o_shape)(step=replicated(mesh), mu=o_specs,
+                                      nu=o_specs)
+            b_shape = batch_spec(cfg, shape)
+            b_specs = batch_specs(b_shape, mesh)
+            step = make_train_step(cfg, opt, attn_impl=attn_impl, remat=remat,
+                                   microbatch=microbatch)
+            jitted = jax.jit(step,
+                             in_shardings=(p_specs, opt_specs, b_specs),
+                             out_shardings=(p_specs, opt_specs, None),
+                             donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(p_shape, o_shape, b_shape)
+        elif shape.kind == "prefill":
+            b_shape = batch_spec(cfg, shape)
+            b_shape = {k: v for k, v in b_shape.items()
+                       if k not in ("targets", "loss_mask")}
+            b_specs = batch_specs(b_shape, mesh)
+            cache_len = (min(shape.seq_len, cfg.sliding_window)
+                         if cfg.sliding_window else shape.seq_len)
+
+            def prefill_step(params, batch):
+                tokens = batch["tokens"]
+                extras = {k: v for k, v in batch.items() if k != "tokens"}
+                logits, cache, _ = tfm.forward_seq(
+                    params, cfg, tokens, build_cache=True,
+                    cache_len=cache_len, attn_impl=attn_impl, remat="none",
+                    **{k: batch.get(k) for k in
+                       ("vision_embeds", "mrope_positions", "frames")
+                       if k in batch})
+                return logits[:, -1], cache
+
+            jitted = jax.jit(prefill_step, in_shardings=(p_specs, b_specs))
+            lowered = jitted.lower(p_shape, b_shape)
+        else:  # decode
+            cache_shape, token_shape = decode_specs(cfg, shape)
+            c_specs = decode_cache_specs(cache_shape, mesh, kv_shard=kv_shard)
+            t_spec = batch_specs({"t": token_shape}, mesh)["t"]
+
+            def serve_step(params, cache, token):
+                return tfm.decode_step(params, cfg, cache, token)
+
+            jitted = jax.jit(serve_step,
+                             in_shardings=(p_specs, c_specs, t_spec),
+                             out_shardings=(None, c_specs),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(p_shape, cache_shape, token_shape)
+
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        compile_s = time.perf_counter() - t0
+
+    meta = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": int(n_dev), "compile_s": compile_s,
+        "attn_impl": attn_impl, "remat": remat, "kv_shard": kv_shard,
+        "microbatch": microbatch, "donate": donate,
+        "skipped": False,
+    }
+    return compiled, meta
+
+
+def run_one(arch, shape_name, *, multi_pod, out_dir=None, verbose=True,
+            **kw):
+    compiled, meta = lower_combo(arch, shape_name, multi_pod=multi_pod, **kw)
+    if meta.get("skipped"):
+        if verbose:
+            print(f"SKIP  {arch:22s} {shape_name:12s} — {meta['reason']}")
+        return meta
+    shape = INPUT_SHAPES[shape_name]
+    cfg = config_for_shape(get_config(arch), shape)
+    rl = analyze(compiled, arch=arch, shape=shape_name,
+                 mesh_name=meta["mesh"], n_devices=meta["n_devices"],
+                 model_flops=model_flops_estimate(cfg, shape))
+    record = {**meta, **rl.asdict()}
+    if verbose:
+        print(f"OK    {rl.row()}  mem/dev="
+              f"{rl.memory_gb_per_device if rl.memory_gb_per_device is None else round(rl.memory_gb_per_device, 2)}GB "
+              f"compile={meta['compile_s']:.1f}s")
+        try:
+            print("      memory_analysis:", compiled.memory_analysis())
+        except Exception as e:            # pragma: no cover
+            print("      memory_analysis unavailable:", e)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{canon(arch)}__{shape_name}__{meta['mesh']}"
+        if kw.get("kv_shard", "heads") != "heads":
+            tag += f"__kv-{kw['kv_shard']}"
+        if kw.get("attn_impl", "chunked") != "chunked":
+            tag += f"__attn-{kw['attn_impl']}"
+        if kw.get("microbatch", 1) != 1:
+            tag += f"__mb{kw['microbatch']}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="no", choices=["no", "yes", "both"])
+    ap.add_argument("--attn-impl", default="chunked",
+                    choices=["chunked", "naive"])
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--kv-shard", default="heads", choices=["heads", "seq"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--donate", action="store_true")
+    ap.add_argument("--decode-params", default="fsdp", choices=["fsdp", "tp"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = [canon(args.arch)] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+
+    failures = []
+    for mp in pods:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    run_one(arch, shape, multi_pod=mp, out_dir=args.out,
+                            attn_impl=args.attn_impl, remat=args.remat,
+                            kv_shard=args.kv_shard, microbatch=args.microbatch,
+                            donate=args.donate,
+                            decode_params=args.decode_params)
+                except Exception:
+                    failures.append((arch, shape, mp))
+                    print(f"FAIL  {arch:22s} {shape:12s} multi_pod={mp}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print("dry-run: all combos lowered and compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Production meshes (DESIGN.md §6).
+
+Defined as FUNCTIONS so importing this module never touches JAX device state
+(the dry-run must set XLA_FLAGS before any device initialization).
+
+  single-pod : (data=16, model=16)            — 256 chips (one v5e pod)
+  multi-pod  : (pod=2, data=16, model=16)     — 512 chips
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run entry point must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (see launch/dryrun.py)")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_cpu_mesh(model: int = 1) -> Mesh:
+    """Degenerate mesh for CPU smoke tests of the sharded code path."""
+    devices = jax.devices()[: max(model, 1)]
+    return Mesh(np.asarray(devices).reshape(1, len(devices)),
+                ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline (per chip).
+HW = {
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bandwidth": 819e9,        # B/s
+    "ici_link_bandwidth": 50e9,    # B/s per link
+}

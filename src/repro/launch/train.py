@@ -1,0 +1,74 @@
+"""Distributed training launcher.
+
+On real hardware this launches the sharded train step on the production mesh;
+on this CPU container it runs the same code path on a degenerate (1,1) mesh at
+smoke scale (use ``--full`` + the dry-run for the production shapes).
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import canon, get_config, get_smoke_config
+from repro.launch.mesh import make_cpu_mesh, make_production_mesh
+from repro.models import example_batch
+from repro.models import transformer as tfm
+from repro.sharding.annotate import DEFAULT_RULES, logical_axis_rules
+from repro.sharding.specs import batch_specs, param_specs
+from repro.training import Adam, cosine_schedule, save_checkpoint
+from repro.training.train_loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--full", action="store_true",
+                    help="published config + production mesh (real HW)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        cfg = get_smoke_config(args.arch).replace(dtype="float32")
+        mesh = make_cpu_mesh()
+    print(f"training {cfg.arch_id} on mesh {dict(mesh.shape)}")
+
+    opt = Adam(learning_rate=cosine_schedule(3e-4, 5, args.steps), clip_norm=1.0)
+    step_fn = make_train_step(cfg, opt, remat="none" if not args.full else "full",
+                              microbatch=args.microbatch)
+
+    with mesh, logical_axis_rules(mesh, DEFAULT_RULES):
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        p_specs = param_specs(jax.eval_shape(lambda: params), mesh)
+        params = jax.device_put(params, p_specs)
+        opt_state = opt.init(params)
+        batch = example_batch(cfg, args.batch, args.seq, jax.random.PRNGKey(1))
+        b_specs = batch_specs(batch, mesh)
+        jitted = jax.jit(step_fn, in_shardings=(p_specs, None, b_specs),
+                         out_shardings=(p_specs, None, None))
+        t0 = time.perf_counter()
+        for i in range(args.steps):
+            batch = example_batch(cfg, args.batch, args.seq,
+                                  jax.random.PRNGKey(1 + i))
+            params, opt_state, metrics = jitted(params, opt_state, batch)
+            if i % 5 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
+                      f"({time.perf_counter() - t0:.1f}s)")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, metadata={"arch": cfg.arch_id})
+        print("checkpoint:", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

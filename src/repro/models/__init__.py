@@ -1,0 +1,5 @@
+"""Model zoo: multi-family transformer substrate (see transformer.py)."""
+from repro.models.model import ModelBundle, batch_spec, build, decode_specs, example_batch, lm_loss
+
+__all__ = ["ModelBundle", "batch_spec", "build", "decode_specs",
+           "example_batch", "lm_loss"]

@@ -1,0 +1,193 @@
+"""Attention implementations (GQA, causal / bidirectional / sliding-window).
+
+Two XLA paths are provided and selected by ``impl``:
+
+* ``"naive"``  — materializes the full (S_q × S_kv) score matrix. This is the
+  straightforward port and serves as the §Perf *baseline*.
+* ``"chunked"``— flash-style online-softmax over KV blocks via ``lax.scan``;
+  peak memory per layer drops from O(S²) to O(S·chunk). This is the
+  optimized default (see EXPERIMENTS.md §Perf).
+
+The Pallas TPU kernels in ``repro.kernels`` implement the same math with
+explicit VMEM BlockSpecs; they are validated against these references in
+interpret mode (CPU container — TPU is the target, not the runtime).
+
+Shapes follow the (batch, seq, heads, head_dim) convention; GQA is handled by
+folding query heads into groups of ``q_per_kv`` per KV head.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _split_gqa(q: jax.Array, num_kv: int) -> jax.Array:
+    """(B, S, H, dh) -> (B, S, KH, qpk, dh)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, d)
+
+
+def _mask(pos_q, pos_kv, *, causal: bool, window: Optional[int]):
+    """Validity mask (..., S_q, S_kv) from absolute positions.
+
+    pos_q: (B, S_q) ; pos_kv: (B, S_kv). Negative kv positions are invalid
+    (used for ring-buffer slots that have not been written yet).
+    """
+    m = pos_kv[:, None, :] >= 0
+    if causal:
+        m &= pos_kv[:, None, :] <= pos_q[:, :, None]
+    if window is not None:
+        m &= pos_q[:, :, None] - pos_kv[:, None, :] < window
+    return m  # (B, S_q, S_kv)
+
+
+def attention_naive(q, k, v, pos_q, pos_kv, *, causal=True,
+                    window: Optional[int] = None) -> jax.Array:
+    """Reference attention. q: (B,Sq,H,dh), k/v: (B,Skv,KH,dh) -> (B,Sq,H,dh).
+
+    Operands stay in their storage dtype with f32 *accumulation*
+    (``preferred_element_type``) — casting K/V to f32 would materialize an
+    f32 copy of the whole KV cache every decode layer (§Perf pair B, iter 3:
+    −430 GB/step HBM traffic on qwen2-vl-72b decode_32k). Softmax statistics
+    remain f32.
+    """
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    qg = _split_gqa(q, kh)                                     # (B,Sq,KH,G,dh)
+    scale = d ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = _mask(pos_q, pos_kv, causal=causal, window=window)  # (B,Sq,Skv)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)                    # f32
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, pos_q, pos_kv, *, causal=True,
+                      window: Optional[int] = None,
+                      kv_chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention, scanning KV in chunks of ``kv_chunk``.
+
+    Peak live memory: (B,KH,G,Sq,kv_chunk) scores instead of (...,S_kv).
+    Numerics: running max/sum in f32, identical to flash attention.
+    """
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    if skv % kv_chunk != 0:
+        # Fall back for ragged sizes (smoke tests); correctness first.
+        return attention_naive(q, k, v, pos_q, pos_kv, causal=causal, window=window)
+    g = h // kh
+    qg = _split_gqa(q, kh).transpose(0, 2, 3, 1, 4)            # (B,KH,G,Sq,dh)
+    scale = jnp.float32(d ** -0.5)
+
+    n_chunks = skv // kv_chunk
+    k_c = k.reshape(b, n_chunks, kv_chunk, kh, d)
+    v_c = v.reshape(b, n_chunks, kv_chunk, kh, d)
+    pos_c = pos_kv.reshape(b, n_chunks, kv_chunk)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry                            # (B,KH,G,Sq,[1|dh])
+        kc, vc, pc = xs                                        # (B,C,KH,dh), (B,C)
+        s = jnp.einsum("bkgqd,bckd->bkgqc", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _mask(pos_q, pc, causal=causal, window=window)  # (B,Sq,C)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vc.dtype),
+                                      vc, preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kh, g, sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, sq, d), jnp.float32)
+    # scan over the chunk axis (moved to leading position)
+    xs = (k_c.transpose(1, 0, 2, 3, 4), v_c.transpose(1, 0, 2, 3, 4),
+          pos_c.transpose(1, 0, 2))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attention(q, k, v, pos_q, pos_kv, *, causal=True, window=None,
+              impl: str = "chunked", kv_chunk: int = 1024) -> jax.Array:
+    if impl == "naive" or k.shape[1] <= kv_chunk:
+        return attention_naive(q, k, v, pos_q, pos_kv, causal=causal, window=window)
+    return attention_chunked(q, k, v, pos_q, pos_kv, causal=causal,
+                             window=window, kv_chunk=kv_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single query token against a [ring-buffer] KV cache)
+# ---------------------------------------------------------------------------
+def ring_slot_positions(pos: jax.Array, cache_len: int) -> jax.Array:
+    """Absolute position stored in each ring-buffer slot, -1 if unwritten.
+
+    ``pos`` is the position of the token being decoded *now* (scalar int32);
+    slots hold positions < pos. Slot j holds the largest p < pos with
+    p % cache_len == j.
+    """
+    j = jnp.arange(cache_len, dtype=jnp.int32)
+    p = pos - 1 - jnp.mod(pos - 1 - j, cache_len)
+    return jnp.where(p >= 0, p, -1)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int] = None,
+                     ) -> jax.Array:
+    """One-token attention. q: (B,H,dh); caches: (B,W,KH,dh); pos: scalar.
+
+    The caches are ring buffers when ``window`` is set (W == window), plain
+    append buffers otherwise (W == max_len). The current token's K/V must
+    already be written to the cache by the caller.
+
+    Always the single-einsum ("naive") form: under a sequence-sharded cache,
+    GSPMD partitions the W contraction with a small partial-softmax
+    all-reduce, whereas a kv-chunk scan dynamic-slices across the sharded dim
+    and triggers involuntary full rematerialization (§Perf pair B, iter 2).
+    On-chip blocking over W is the Pallas flash_decode kernel's job.
+    """
+    b, h, d = q.shape
+    w, kh = k_cache.shape[1], k_cache.shape[2]
+    slot_pos = ring_slot_positions(pos + 1, w)                 # includes current
+    pos_kv = jnp.broadcast_to(slot_pos[None], (b, w))
+    pos_q = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (b, 1))
+    out = attention_naive(q[:, None], k_cache, v_cache, pos_q, pos_kv,
+                          causal=True, window=window)
+    return out[:, 0]                                           # (B,H,dh)
+
+
+def update_cache(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write one token's K or V into the (ring) cache.
+
+    cache: (B, W, KH, dh); new: (B, KH, dh); pos: scalar absolute position.
+    """
+    w = cache.shape[1]
+    slot = jnp.mod(jnp.asarray(pos, jnp.int32), w)
+    return jax.lax.dynamic_update_slice(cache, new[:, None], (0, slot, 0, 0))
+
+
+def prefill_cache(k: jax.Array, v: jax.Array, cache_len: int):
+    """Build decode caches from prefill K/V. k/v: (B,S,KH,dh) -> (B,W,KH,dh).
+
+    For windowed attention (cache_len < S) keeps the last ``cache_len``
+    positions arranged at their ring slots so decode can continue seamlessly.
+    """
+    b, s, kh, d = k.shape
+    if cache_len >= s:
+        pad = [(0, 0), (0, cache_len - s), (0, 0), (0, 0)]
+        return jnp.pad(k, pad), jnp.pad(v, pad)
+    # last cache_len tokens, placed at slot = position % cache_len
+    tail_pos = jnp.arange(s - cache_len, s)
+    slots = jnp.mod(tail_pos, cache_len)
+    k_tail, v_tail = k[:, -cache_len:], v[:, -cache_len:]
+    kc = jnp.zeros((b, cache_len, kh, d), k.dtype).at[:, slots].set(k_tail)
+    vc = jnp.zeros((b, cache_len, kh, d), v.dtype).at[:, slots].set(v_tail)
+    return kc, vc

@@ -1,0 +1,144 @@
+"""Shared building blocks: norms, initializers, activations, positional codes.
+
+All modules are pure functions over explicit param pytrees. Reductions
+(norm statistics, softmax, rope rotation) run in float32 regardless of the
+param/activation dtype, per TPU numerics practice.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ACT_SILU, ACT_SQ_RELU, ACT_GELU
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_axis_size: Optional[int] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (the MaxText/T5 default)."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, dtype) -> dict:
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def group_norm_heads(x: jax.Array, scale: jax.Array, eps: float = 64e-5) -> jax.Array:
+    """Per-head group norm (RWKV output norm). x: (..., H, dh)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+def activate(h: jax.Array, gate: Optional[jax.Array], kind: str) -> jax.Array:
+    if kind == ACT_SILU:
+        assert gate is not None, "SwiGLU requires a gate projection"
+        return jax.nn.silu(gate) * h
+    if kind == ACT_SQ_RELU:
+        return jnp.square(jax.nn.relu(h))
+    if kind == ACT_GELU:
+        return jax.nn.gelu(h)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def gated(kind: str) -> bool:
+    return kind == ACT_SILU
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies, f32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate pairs. x: (B, S, H, dh); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                     # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]                          # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1).astype(x.dtype)
+
+
+def mrope_sections(head_dim: int) -> tuple:
+    """Split of the head_dim//2 frequency pairs into (t, h, w) sections.
+
+    Qwen2-VL uses [16, 24, 24] of 64 pairs; we generalize to (1/4, 3/8, 3/8).
+    """
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+def apply_mrope(x: jax.Array, positions_thw: jax.Array, theta: float) -> jax.Array:
+    """Multimodal RoPE. positions_thw: (3, B, S) — temporal/height/width ids.
+
+    Frequency pairs are partitioned into three sections, each rotated by its
+    own position stream [arXiv:2409.12191 §2.1].
+    """
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                     # (half,)
+    secs = mrope_sections(x.shape[-1])
+    # Build per-pair position ids (B, S, half) by section.
+    parts = []
+    off = 0
+    for i, n in enumerate(secs):
+        parts.append(jnp.broadcast_to(positions_thw[i][..., None],
+                                      positions_thw.shape[1:] + (n,)))
+        off += n
+    pos = jnp.concatenate(parts, axis=-1).astype(jnp.float32)  # (B, S, half)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1).astype(x.dtype)
+
+
+def positions_for(cfg: ModelConfig, batch: int, start: jax.Array, seq: int) -> jax.Array:
+    """Default linear positions (B, S) starting at ``start`` (scalar or (B,))."""
+    base = jnp.arange(seq, dtype=jnp.int32)[None, :]
+    start = jnp.asarray(start, jnp.int32)
+    if start.ndim == 0:
+        start = start[None]
+    return jnp.broadcast_to(base + start[:, None], (batch, seq))

@@ -1,0 +1,125 @@
+"""Chunked linear attention with per-step (data-dependent) decay.
+
+One engine serves two recurrences:
+
+* ``mode="rwkv"`` (RWKV-6 time-mix [arXiv:2404.05892]):
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T
+      o_t = q_t S_{t-1} + (q_t · (u ⊙ k_t)) v_t        (u = bonus param)
+  with a *vector* decay w_t ∈ (0,1)^{dk} per step.
+
+* ``mode="ssd"`` (Mamba-2 / SSD [used by the Hymba SSM heads]):
+      S_t = a_t S_{t-1} + k_t v_t^T                     (scalar decay a_t)
+      o_t = q_t S_t
+  i.e. the current token contributes (q_t · k_t) v_t with no decay.
+
+Both are computed in O(T·C·d) chunks: intra-chunk via a decay-weighted
+attention matrix, inter-chunk via the carried state. All decay algebra runs
+in f32 log-space.
+
+NUMERICS CONTRACT: callers must clamp per-step log-decay to [-MAX_LOG_DECAY, 0]
+(see ``MAX_LOG_DECAY``); with chunk_size · MAX_LOG_DECAY ≤ 80 the intra-chunk
+exponentials stay inside the f32 range. The model code enforces the clamp.
+
+The Pallas kernel ``repro.kernels.rwkv6_chunk`` implements the same chunked
+algorithm with VMEM-resident (C, d) tiles; this module is its oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+MAX_LOG_DECAY = 1.0  # per-step |log w| bound enforced by callers
+
+
+def _chunk(x: jax.Array, c: int) -> jax.Array:
+    b, h, t, d = x.shape
+    return x.reshape(b, h, t // c, c, d)
+
+
+def chunked_linear_attention(
+    q: jax.Array,            # (B, H, T, dk)
+    k: jax.Array,            # (B, H, T, dk)
+    v: jax.Array,            # (B, H, T, dv)
+    log_decay: jax.Array,    # (B, H, T, dk) vector, or (B, H, T, 1) scalar
+    *,
+    bonus: Optional[jax.Array] = None,   # (H, dk) — rwkv "u" param
+    mode: str = "rwkv",
+    chunk_size: int = 64,
+    initial_state: Optional[jax.Array] = None,  # (B, H, dk, dv) f32
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (B,H,T,dv) in q.dtype, final_state (B,H,dk,dv) f32)."""
+    assert mode in ("rwkv", "ssd")
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk_size, t)
+    if t % c != 0:
+        raise ValueError(f"T={t} not divisible by chunk_size={c}")
+
+    qf = _chunk(q.astype(jnp.float32), c)
+    kf = _chunk(k.astype(jnp.float32), c)
+    vf = _chunk(v.astype(jnp.float32), c)
+    lw = _chunk(jnp.broadcast_to(log_decay.astype(jnp.float32),
+                                 (b, h, t, log_decay.shape[-1])), c)
+
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((b, h, dk, dv), jnp.float32))
+
+    # strict-lower mask (j < t) for the intra-chunk attention matrix
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)
+
+    def body(state, xs):
+        qc, kc, vc, lwc = xs                                   # (B,H,C,·)
+        inc = jnp.cumsum(lwc, axis=-2)                         # inclusive Σ_{i≤t}
+        exc = inc - lwc                                        # exclusive Σ_{i<t}
+        tot = inc[..., -1:, :]                                 # (B,H,1,dk)
+        if mode == "rwkv":
+            q_dec = qc * jnp.exp(exc)                          # decay to t-1
+        else:
+            q_dec = qc * jnp.exp(inc)                          # decay through t
+        k_dec = kc * jnp.exp(-inc)                             # undo decay at j
+        k_tail = kc * jnp.exp(tot - inc)                       # decay j → chunk end
+
+        inter = jnp.einsum("bhcd,bhde->bhce", q_dec, state)    # vs carried state
+        att = jnp.einsum("bhcd,bhjd->bhcj", q_dec, k_dec) * tri
+        intra = jnp.einsum("bhcj,bhje->bhce", att, vc)
+        if mode == "rwkv":
+            diag_coef = jnp.sum(qc * bonus[None, :, None, :] * kc, -1, keepdims=True)
+        else:
+            diag_coef = jnp.sum(qc * kc, -1, keepdims=True)
+        out = inter + intra + diag_coef * vc
+
+        # decay carried state through the whole chunk, add this chunk's rank-C update
+        state = (state * jnp.exp(tot).transpose(0, 1, 3, 2)
+                 + jnp.einsum("bhjd,bhje->bhde", k_tail, vc))
+        return state, out
+
+    xs = tuple(x.transpose(2, 0, 1, 3, 4) for x in (qf, kf, vf, lw))
+    state, outs = jax.lax.scan(body, s0, xs)
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, t, dv)
+    return out.astype(q.dtype), state
+
+
+def linear_attention_step(
+    state: jax.Array,        # (B, H, dk, dv) f32
+    q: jax.Array,            # (B, H, dk)
+    k: jax.Array,            # (B, H, dk)
+    v: jax.Array,            # (B, H, dv)
+    log_decay: jax.Array,    # (B, H, dk) or (B, H, 1)
+    *,
+    bonus: Optional[jax.Array] = None,
+    mode: str = "rwkv",
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent update. Returns (out (B,H,dv), new_state)."""
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    w = jnp.exp(jnp.broadcast_to(log_decay.astype(jnp.float32), kf.shape))
+    outer = jnp.einsum("bhd,bhe->bhde", kf, vf)
+    if mode == "rwkv":
+        out = (jnp.einsum("bhd,bhde->bhe", qf, state)
+               + jnp.sum(qf * bonus[None] * kf, -1, keepdims=True) * vf)
+        new_state = state * w[..., None] + outer
+    else:
+        new_state = state * w[..., None] + outer
+        out = jnp.einsum("bhd,bhde->bhe", qf, new_state)
+    return out.astype(q.dtype), new_state

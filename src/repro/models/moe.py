@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN with GLaM-style grouped one-hot dispatch.
+
+Tokens are reshaped into groups of ``group_size``; within each group every
+expert has a fixed capacity C = ceil(group_size * top_k / E * capacity_factor)
+(rounded up to a multiple of 8 for TPU lane alignment). Dispatch/combine are
+einsums against a (G, T, E, C) one-hot tensor — fully static shapes, no
+dynamic gather, so GSPMD can shard groups over (data, model) and experts over
+model and insert the all-to-alls itself (DESIGN.md §4).
+
+Losses: switch-style load-balance auxiliary loss and router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from repro.configs.base import MoEConfig
+from repro.models.common import dense_init, activate, gated
+from repro.sharding.annotate import with_sharding
+
+# §Perf iteration A1 A/B switch: "moe_group" reproduces the pre-fix conflicting
+# annotation (G over (data,model) while E wants model) for baseline runs.
+_GROUP_AXES = os.environ.get("REPRO_MOE_GROUP_AXES", "moe_group_dp")
+
+
+def init_moe(key, d_model: int, moe: MoEConfig, activation: str, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    e, f = moe.num_experts, moe.expert_d_ff
+    p = {
+        "router": dense_init(ks[0], (d_model, e), dtype=jnp.float32),
+        "w_up": dense_init(ks[1], (e, d_model, f), in_axis_size=d_model, dtype=dtype),
+        "w_down": dense_init(ks[2], (e, f, d_model), in_axis_size=f, dtype=dtype),
+    }
+    if gated(activation):
+        p["w_gate"] = dense_init(ks[3], (e, d_model, f), in_axis_size=d_model, dtype=dtype)
+    return p
+
+
+def _capacity(group_size: int, moe: MoEConfig) -> int:
+    c = int(group_size * moe.top_k * moe.capacity_factor / moe.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8, min 8
+
+
+def apply_moe(params: dict, x: jax.Array, moe: MoEConfig, activation: str,
+              ) -> Tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (y (B,S,d), aux {load_balance_loss, router_z_loss}).
+
+    Internally reshapes to (G, T, d) groups. B*S must be divisible by the
+    effective group size (callers guarantee this; decode uses one group).
+    """
+    b, s, d = x.shape
+    tokens = b * s
+    tg = min(moe.group_size, tokens)
+    assert tokens % tg == 0, f"tokens={tokens} not divisible by group={tg}"
+    g = tokens // tg
+    e, k = moe.num_experts, moe.top_k
+    cap = _capacity(tg, moe)
+
+    xg = x.reshape(g, tg, d)
+    # G shards over the data axes ONLY: the expert dim of the dispatch einsum
+    # owns the model axis, and giving G both axes forces SPMD to replicate
+    # the (G,T,E,C) tensors (§Perf iteration 1 — 40x collective reduction)
+    xg = with_sharding(xg, (_GROUP_AXES, None, None))
+
+    # bf16 operands + f32 accumulation: casting xg to f32 here would make the
+    # *backward* activation gradient f32 end-to-end, doubling the per-layer
+    # TP all-reduce payload (§Perf iteration 3)
+    logits = jnp.einsum("gtd,de->gte", xg,
+                        params["router"].astype(xg.dtype),
+                        preferred_element_type=jnp.float32)      # (G,T,E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # (G,T,k)
+    # normalize the selected gates (DeepSeek/Mixtral convention)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # --- build dispatch + combine tensors slot by slot (k ≤ 8: python loop) --
+    combine = jnp.zeros((g, tg, e, cap), jnp.float32)
+    counts = jnp.zeros((g, 1, e), jnp.int32)                    # tokens routed so far
+    for slot in range(k):
+        sel = jax.nn.one_hot(gate_idx[..., slot], e, dtype=jnp.int32)  # (G,T,E)
+        pos = jnp.cumsum(sel, axis=1) - sel + counts            # position within expert
+        keep = (pos < cap) & (sel > 0)
+        counts = counts + jnp.sum(sel, axis=1, keepdims=True)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=jnp.float32)
+        disp_slot = sel.astype(jnp.float32)[..., None] * pos_oh  # (G,T,E,C)
+        combine = combine + disp_slot * gate_vals[..., slot][..., None, None]
+    combine = with_sharding(combine, ("moe_group_dp", None, "expert", None))
+    dispatch = (combine > 0).astype(x.dtype)                     # (G,T,E,C)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg)              # (G,E,C,d)
+    xe = with_sharding(xe, ("moe_group_dp", "expert", None, None))
+
+    up = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    gate_proj = (jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+                 if "w_gate" in params else None)
+    h = activate(up, gate_proj, activation)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])       # (G,E,C,d)
+    ye = with_sharding(ye, ("moe_group_dp", "expert", None, None))
+
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+    y = y.reshape(b, s, d)
+
+    # --- aux losses ---------------------------------------------------------
+    # load balance: E * Σ_e fraction_routed(e) * mean_prob(e)   [Switch eq.4-6]
+    top1 = jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32)
+    frac = jnp.mean(top1, axis=(0, 1))
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    lb = e * jnp.sum(frac * mean_p) * moe.aux_loss_coef
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))) * moe.router_z_coef
+    return y, {"load_balance_loss": lb, "router_z_loss": z}

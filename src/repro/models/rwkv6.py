@@ -1,0 +1,125 @@
+"""RWKV-6 "Finch" blocks [arXiv:2404.05892]: time-mix + channel-mix.
+
+Faithful structure: token-shift lerps, data-dependent per-channel decay via a
+low-rank adapter, bonus-``u`` current-token term, per-head group norm, and a
+squared-ReLU channel-mix. One documented deviation (DESIGN.md §8): the decay
+is parameterized as ``log w = -MAX_LOG_DECAY * sigmoid(w0 + lora(x))`` instead
+of ``-exp(w0 + lora(x))`` so the per-step log-decay is bounded in (-1, 0) —
+the numerics contract of the chunked kernel (see models/linear_attn.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, group_norm_heads
+from repro.models.linear_attn import (MAX_LOG_DECAY, chunked_linear_attention,
+                                      linear_attention_step)
+from repro.sharding.annotate import with_sharding
+
+DECAY_LORA = 64
+
+
+def init_time_mix(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 10)
+    return {
+        "mix": jnp.full((5, d), 0.5, dtype),            # r,k,v,w,g shift lerps
+        "w_r": dense_init(ks[0], (d, h * dh), dtype=dtype),
+        "w_k": dense_init(ks[1], (d, h * dh), dtype=dtype),
+        "w_v": dense_init(ks[2], (d, h * dh), dtype=dtype),
+        "w_g": dense_init(ks[3], (d, h * dh), dtype=dtype),
+        "w_o": dense_init(ks[4], (h * dh, d), dtype=dtype),
+        "decay_base": jnp.zeros((h, dh), jnp.float32),
+        "decay_a": dense_init(ks[5], (d, DECAY_LORA), dtype=jnp.float32),
+        "decay_b": (dense_init(ks[6], (DECAY_LORA, h * dh), dtype=jnp.float32) * 0.1),
+        "bonus": jnp.zeros((h, dh), jnp.float32),
+        "gn_scale": jnp.ones((h, dh), jnp.float32),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mix": jnp.full((2, d), 0.5, dtype),            # k,r shift lerps
+        "w_k": dense_init(ks[0], (d, f), dtype=dtype),
+        "w_v": dense_init(ks[1], (f, d), in_axis_size=f, dtype=dtype),
+        "w_r": dense_init(ks[2], (d, d), dtype=dtype),
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """Token shift: y_t = x_{t-1}; y_0 = prev. x: (B,T,d), prev: (B,d)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _log_decay(p: dict, xw: jax.Array) -> jax.Array:
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["decay_a"]) @ p["decay_b"]
+    base = p["decay_base"].reshape(-1)
+    return -MAX_LOG_DECAY * jax.nn.sigmoid(base + lora)     # (..., H*dh) in (-1,0)
+
+
+def time_mix(p: dict, x: jax.Array, prev: jax.Array, cfg: ModelConfig,
+             state=None, chunk_size: int = 64):
+    """Sequence-mode time-mix. x: (B,T,d) -> (out, last_x (B,d), state)."""
+    b, t, d = x.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    xs = _shift(x, prev)
+    mix = p["mix"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + mix[i] * (xs - x) for i in range(5))
+    r = (xr @ p["w_r"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = (xk @ p["w_k"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = (xv @ p["w_v"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    g = xg @ p["w_g"]
+    lw = _log_decay(p, xw).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    r = with_sharding(r, ("batch", "heads", None, None))
+    out, state = chunked_linear_attention(
+        r, k, v, lw, bonus=p["bonus"], mode="rwkv",
+        chunk_size=chunk_size, initial_state=state)
+    out = out.transpose(0, 2, 1, 3)                          # (B,T,H,dh)
+    out = group_norm_heads(out, p["gn_scale"]).reshape(b, t, h * dh)
+    out = (out * jax.nn.silu(g)) @ p["w_o"]
+    return out, x[:, -1], state
+
+
+def time_mix_step(p: dict, x: jax.Array, prev: jax.Array, state: jax.Array,
+                  cfg: ModelConfig):
+    """One-token time-mix. x: (B,d) -> (out (B,d), new_prev, new_state)."""
+    b, d = x.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    mix = p["mix"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + mix[i] * (prev - x) for i in range(5))
+    r = (xr @ p["w_r"]).reshape(b, h, dh)
+    k = (xk @ p["w_k"]).reshape(b, h, dh)
+    v = (xv @ p["w_v"]).reshape(b, h, dh)
+    g = xg @ p["w_g"]
+    lw = _log_decay(p, xw).reshape(b, h, dh)
+    out, state = linear_attention_step(state, r, k, v, lw,
+                                       bonus=p["bonus"], mode="rwkv")
+    out = group_norm_heads(out, p["gn_scale"]).reshape(b, h * dh)
+    out = (out * jax.nn.silu(g)) @ p["w_o"]
+    return out, x, state
+
+
+def channel_mix(p: dict, x: jax.Array, prev: jax.Array):
+    """Sequence-mode channel-mix (squared-ReLU gated MLP with token shift)."""
+    xs = _shift(x, prev)
+    mix = p["mix"].astype(x.dtype)
+    xk = x + mix[0] * (xs - x)
+    xr = x + mix[1] * (xs - x)
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    out = jax.nn.sigmoid(xr @ p["w_r"]) * (kk @ p["w_v"])
+    return out, x[:, -1]
+
+
+def channel_mix_step(p: dict, x: jax.Array, prev: jax.Array):
+    mix = p["mix"].astype(x.dtype)
+    xk = x + mix[0] * (prev - x)
+    xr = x + mix[1] * (prev - x)
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    out = jax.nn.sigmoid(xr @ p["w_r"]) * (kk @ p["w_v"])
+    return out, x

@@ -1,0 +1,115 @@
+"""Mamba-2 / SSD selective-state-space block (the Hymba SSM heads).
+
+    h_t = exp(-exp(A_log)·Δ_t) · h_{t-1} + Δ_t B_t x_t
+    y_t = C_t h_t ,   y = y ⊙ silu(z) @ W_out
+
+Computed with the shared chunked linear-attention engine (scalar per-head
+decay, ``mode="ssd"``). B/C are shared across heads (MQA-style, as in
+Mamba-2). Depthwise causal conv with a (conv_width-1) tail carried as decode
+state. Log-decay clamped to the engine's numerics contract.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.common import dense_init
+from repro.models.linear_attn import (MAX_LOG_DECAY, chunked_linear_attention,
+                                      linear_attention_step)
+from repro.sharding.annotate import with_sharding
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.state_size
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner, nh, n = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * d_inner), dtype=dtype),     # x | z
+        "conv": (jax.random.normal(ks[1], (s.conv_width, d_inner), jnp.float32)
+                 * (1.0 / s.conv_width)).astype(dtype),
+        "w_bc": dense_init(ks[2], (d_inner, 2 * n), dtype=dtype),     # B | C
+        "w_dt": dense_init(ks[3], (d_inner, nh), dtype=dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "a_log": jnp.zeros((nh,), jnp.float32),                        # A = -exp(a_log)
+        "w_out": dense_init(ks[4], (d_inner, d), in_axis_size=d_inner, dtype=dtype),
+    }
+
+
+def _conv(x: jax.Array, w: jax.Array, tail: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Causal depthwise conv. x: (B,T,Di), w: (K,Di), tail: (B,K-1,Di)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([tail, x], axis=1)                   # (B, T+K-1, Di)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out), xp[:, -(k - 1):]
+
+
+def _gates(p: dict, xc: jax.Array, nh: int, n: int):
+    """Common post-conv projections. xc: (B,T,Di) → (q,k per head, dt, log_decay)."""
+    bc = xc @ p["w_bc"]
+    b_in, c_out = jnp.split(bc, 2, axis=-1)                   # (B,T,N) each
+    dt = jax.nn.softplus((xc @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])                       # (B,T,nh)
+    log_decay = jnp.clip(-jnp.exp(p["a_log"]) * dt, -MAX_LOG_DECAY, -1e-6)
+    return b_in, c_out, dt, log_decay
+
+
+def apply_ssm(p: dict, x: jax.Array, cfg: ModelConfig, *,
+              conv_tail=None, state=None):
+    """Sequence mode. x: (B,T,d) → (y (B,T,d), conv_tail, state)."""
+    b, t, _ = x.shape
+    s = cfg.ssm
+    d_inner, nh, n = _dims(cfg)
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    if conv_tail is None:
+        conv_tail = jnp.zeros((b, s.conv_width - 1, d_inner), x.dtype)
+    xc, conv_tail = _conv(xi, p["conv"], conv_tail)
+    xc = with_sharding(xc, ("batch", None, "d_inner"))
+
+    b_in, c_out, dt, log_decay = _gates(p, xc, nh, n)
+    # fold Δ into v; broadcast shared B/C over heads
+    v = (xc.reshape(b, t, nh, s.head_dim)
+         * dt[..., None].astype(x.dtype)).transpose(0, 2, 1, 3)   # (B,nh,T,dh)
+    q = jnp.broadcast_to(c_out[:, None], (b, nh, t, n))
+    kk = jnp.broadcast_to(b_in[:, None], (b, nh, t, n))
+    lw = log_decay.transpose(0, 2, 1)[..., None]               # (B,nh,T,1)
+
+    y, state = chunked_linear_attention(q, kk, v, lw, mode="ssd",
+                                        chunk_size=s.chunk_size,
+                                        initial_state=state)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d_inner)
+    y = (y * jax.nn.silu(z)) @ p["w_out"]
+    return y, conv_tail, state
+
+
+def ssm_step(p: dict, x: jax.Array, cfg: ModelConfig, conv_tail, state):
+    """One-token recurrent mode. x: (B,d) → (y (B,d), conv_tail, state)."""
+    b, _ = x.shape
+    s = cfg.ssm
+    d_inner, nh, n = _dims(cfg)
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([conv_tail, xi[:, None]], axis=1)  # (B,K,Di)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, p["conv"]))
+    conv_tail = window[:, 1:]
+
+    b_in, c_out, dt, log_decay = _gates(p, xc[:, None], nh, n)
+    v = (xc.reshape(b, nh, s.head_dim) * dt[:, 0, :, None].astype(x.dtype))
+    q = jnp.broadcast_to(c_out[:, 0, None], (b, nh, n))
+    kk = jnp.broadcast_to(b_in[:, 0, None], (b, nh, n))
+    y, state = linear_attention_step(state, q, kk, v,
+                                     log_decay[:, 0, :, None], mode="ssd")
+    y = y.reshape(b, d_inner)
+    y = (y * jax.nn.silu(z)) @ p["w_out"]
+    return y, conv_tail, state

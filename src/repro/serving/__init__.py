@@ -1,0 +1,6 @@
+"""Serving runtime: real JAX engine, discrete-event simulator, KV accounting."""
+from repro.serving.engine import Engine, serve
+from repro.serving.kv_cache import BlockAllocator
+from repro.serving.metrics import LatencyReport, report
+from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.simulator import CostModel, run_policy, simulate

@@ -1,0 +1,50 @@
+"""KV-cache block accounting (vLLM-style paged bookkeeping, TPU-adapted).
+
+vLLM's PagedAttention maps logical KV blocks to scattered physical blocks in
+GPU memory. On TPU, static shapes win: the engine keeps one contiguous
+fixed-length cache lane per running slot, and this allocator reproduces the
+*accounting* semantics (admission control, capacity back-pressure, free-list
+reuse) over those lanes' block budgets (DESIGN.md §4). The scheduler consults
+``can_allocate`` before admitting — a request that would exceed the cache
+budget stays in W, exactly like vLLM deferring on OOM.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+@dataclass
+class BlockAllocator:
+    total_blocks: int
+    block_size: int = 16
+    _used: Dict[int, int] = field(default_factory=dict)   # req_id -> blocks
+
+    def blocks_for(self, tokens: int) -> int:
+        return -(-max(tokens, 1) // self.block_size)
+
+    @property
+    def free_blocks(self) -> int:
+        return self.total_blocks - sum(self._used.values())
+
+    def can_allocate(self, tokens: int) -> bool:
+        return self.blocks_for(tokens) <= self.free_blocks
+
+    def allocate(self, req_id: int, tokens: int) -> None:
+        need = self.blocks_for(tokens)
+        if need > self.free_blocks:
+            raise MemoryError(f"KV cache exhausted: need {need}, "
+                              f"free {self.free_blocks}")
+        self._used[req_id] = need
+
+    def extend(self, req_id: int, total_tokens: int) -> bool:
+        """Grow a request's reservation; False if capacity exceeded."""
+        need = self.blocks_for(total_tokens)
+        delta = need - self._used.get(req_id, 0)
+        if delta > self.free_blocks:
+            return False
+        self._used[req_id] = need
+        return True
+
+    def free(self, req_id: int) -> None:
+        self._used.pop(req_id, None)

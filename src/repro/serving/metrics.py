@@ -1,0 +1,50 @@
+"""Serving metrics: the paper's average & p90 *per-token* latency (§IV) plus
+throughput/TTFT diagnostics."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.scheduler.request import Request
+
+
+@dataclass(frozen=True)
+class LatencyReport:
+    policy: str
+    n_requests: int
+    avg_per_token_latency: float      # mean over requests of e2e/outlen
+    p90_per_token_latency: float      # 90th percentile of the same
+    avg_ttft: float                   # time to first token
+    makespan: float                   # last finish − first arrival
+    throughput_tok_s: float
+    mean_wait: float                  # arrival → admission
+
+    def row(self) -> str:
+        return (f"{self.policy:10s} n={self.n_requests:5d} "
+                f"avg={self.avg_per_token_latency * 1e3:9.2f} ms/tok  "
+                f"p90={self.p90_per_token_latency * 1e3:9.2f} ms/tok  "
+                f"ttft={self.avg_ttft:7.2f} s  tput={self.throughput_tok_s:9.1f} tok/s")
+
+
+def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
+    assert finished, "no finished requests"
+    per_tok = np.array([r.per_token_latency() for r in finished])
+    ttft = np.array([(r.first_token_time - r.arrival_time) for r in finished
+                     if r.first_token_time is not None])
+    waits = np.array([(r.start_time - r.arrival_time) for r in finished
+                      if r.start_time is not None])
+    t0 = min(r.arrival_time for r in finished)
+    t1 = max(r.finish_time for r in finished)
+    tokens = sum(r.true_length for r in finished)
+    return LatencyReport(
+        policy=policy,
+        n_requests=len(finished),
+        avg_per_token_latency=float(per_tok.mean()),
+        p90_per_token_latency=float(np.percentile(per_tok, 90)),
+        avg_ttft=float(ttft.mean()) if len(ttft) else float("nan"),
+        makespan=float(t1 - t0),
+        throughput_tok_s=float(tokens / max(t1 - t0, 1e-9)),
+        mean_wait=float(waits.mean()) if len(waits) else 0.0,
+    )

@@ -1,0 +1,42 @@
+"""Token samplers for the serving engine: greedy / temperature / top-k.
+
+Pure functions over logits so they jit/vmap cleanly inside the engine's
+decode program. The paper's decoding setup (temperature=0.7, top-p=0.9) is
+what its δ calibration assumes; the engine defaults to greedy for determinism
+in tests and supports the paper's setup via ``SamplerConfig``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0        # 0 = greedy
+    top_k: int = 0                  # 0 = full vocab
+    top_p: float = 1.0              # nucleus; 1.0 = off
+
+
+def sample(logits: jax.Array, key: jax.Array,
+           cfg: SamplerConfig = SamplerConfig()) -> jax.Array:
+    """logits: (..., V) → token ids (...,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k and cfg.top_k < lf.shape[-1]:
+        kth = jnp.sort(lf, axis=-1)[..., -cfg.top_k][..., None]
+        lf = jnp.where(lf < kth, -jnp.inf, lf)
+    if cfg.top_p < 1.0:
+        sorted_lf = jnp.sort(lf, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_lf, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative mass >= top_p: find cutoff logit
+        keep = cum - probs < cfg.top_p
+        cutoff = jnp.min(jnp.where(keep, sorted_lf, jnp.inf), axis=-1,
+                         keepdims=True)
+        lf = jnp.where(lf < cutoff, -jnp.inf, lf)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

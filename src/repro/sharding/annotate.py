@@ -1,0 +1,93 @@
+"""Logical-axis sharding annotations.
+
+Model code tags activations with *logical* axis names ("batch", "heads",
+"expert", ...). A rules context maps logical names to physical mesh axes;
+outside any rules context the tags are no-ops, so the same model code runs
+un-sharded on CPU smoke tests and fully sharded under the production mesh.
+
+Non-divisible dims are silently left unsharded (e.g. a decode step with one
+MoE group under a 16-way axis) — GSPMD would reject the constraint otherwise.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX = threading.local()
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+def _state():
+    if not hasattr(_CTX, "stack"):
+        _CTX.stack = []
+    return _CTX.stack
+
+
+@contextmanager
+def logical_axis_rules(mesh: Mesh, rules: Dict[str, Axes]):
+    """Activate a logical→physical mapping for ``with_sharding`` tags."""
+    _state().append((mesh, rules))
+    try:
+        yield
+    finally:
+        _state().pop()
+
+
+def current_mesh_rules() -> Optional[Tuple[Mesh, Dict[str, Axes]]]:
+    st = _state()
+    return st[-1] if st else None
+
+
+def resolve_spec(logical: Sequence[Axes], shape, mesh: Mesh,
+                 rules: Dict[str, Axes]) -> P:
+    """Map logical axis names to a PartitionSpec, dropping non-divisible dims."""
+    out = []
+    used: set = set()
+    for dim, name in enumerate(logical):
+        phys = rules.get(name) if isinstance(name, str) else None
+        if phys is None:
+            out.append(None)
+            continue
+        axes = (phys,) if isinstance(phys, str) else tuple(phys)
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if size > 1 and shape[dim] % size == 0:
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def with_sharding(x: jax.Array, logical: Sequence[Axes]) -> jax.Array:
+    """Tag an intermediate with logical axes (no-op without active rules)."""
+    ctx = current_mesh_rules()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve_spec(logical, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# Default logical→physical mapping for the production meshes (DESIGN.md §6).
+# "data"-like axes absorb the "pod" axis when it exists.
+DEFAULT_RULES: Dict[str, Axes] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),        # param FSDP dim
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "expert": "model",
+    "vocab": "model",
+    "moe_group": ("data", "model"),  # dispatch groups, fully token-sharded
+    "moe_group_dp": ("pod", "data"), # groups in the (G,E,C,d) expert layout
+    "seq": None,                     # sequence kept unsharded (no CP here)
+    "d_inner": "model",              # SSM inner channels
+}

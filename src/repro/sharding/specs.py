@@ -1,0 +1,167 @@
+"""Parameter / activation / cache partition specs for the production meshes.
+
+Policy (DESIGN.md §6): tensor-parallel dims (heads, ff, experts, vocab) shard
+over ``model``; one non-TP matrix dim shards over the FSDP axes
+(``data`` or ``("pod","data")``); everything indivisible or tiny is
+replicated. Specs are derived *by leaf path name*, so every architecture
+family (dense/MoE/RWKV/SSM/enc-dec) is covered by one rule table.
+
+``decode_cache_specs`` has two modes (the §Perf hillclimb for decode):
+
+* ``kv_shard="heads"`` — baseline: kv-head dim over ``model``. GQA configs
+  with kv_heads < 16 cannot split 16 ways, the dim is dropped and the cache is
+  replicated across ``model`` (memory-hungry — visible in the roofline).
+* ``kv_shard="seq"``   — optimized: cache *length* dim over ``model``
+  (sequence-sharded decode; XLA inserts the partial-softmax reductions).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# leaf-name regex -> logical spec template, aligned to the LAST ndims of the
+# leaf (leading stacked-layer axes are padded with None automatically).
+# Axis vocabulary: "fsdp" | "model" | None.
+_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    # embeddings / heads
+    (r"(^|/)embed$",            ("model", "fsdp")),     # (V, d)
+    (r"(^|/)lm_head$",          ("fsdp", "model")),     # (d, V)
+    (r"(^|/)pos_embed$",        (None, "fsdp")),
+    # attention
+    (r"/attn/w[qkv]$",          ("fsdp", "model")),
+    (r"/attn/wo$",              ("model", "fsdp")),
+    (r"/cross/w[qkv]$",         ("fsdp", "model")),
+    (r"/cross/wo$",             ("model", "fsdp")),
+    # dense MLP
+    (r"/mlp/w_(up|gate)$",      ("fsdp", "model")),
+    (r"/mlp/w_down$",           ("model", "fsdp")),
+    # MoE
+    (r"/moe/router$",           ("fsdp", "model")),     # (d, E)
+    (r"/moe/w_(up|gate)$",      ("model", "fsdp", None)),  # (E, d, f)
+    (r"/moe/w_down$",           ("model", None, "fsdp")),  # (E, f, d)
+    # RWKV time-mix / channel-mix
+    (r"/tm/w_[rkvg]$",          ("fsdp", "model")),
+    (r"/tm/w_o$",               ("model", "fsdp")),
+    (r"/tm/decay_a$",           ("fsdp", None)),
+    (r"/tm/decay_b$",           (None, "model")),
+    (r"/cm/w_[kr]$",            ("fsdp", "model")),
+    (r"/cm/w_v$",               ("model", "fsdp")),
+    # SSD/Mamba (hybrid)
+    (r"/ssm/w_in$",             ("fsdp", "model")),
+    (r"/ssm/conv$",             (None, "model")),
+    (r"/ssm/w_(bc|dt)$",        ("model", None)),
+    (r"/ssm/w_out$",            ("model", "fsdp")),
+)
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return fsdp_axes(mesh)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = (axes,) if isinstance(axes, str) else axes
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _resolve(template, shape, mesh: Mesh, *, fsdp: bool = True) -> P:
+    """Logical template → PartitionSpec, padded to ndim, divisibility-checked.
+
+    ``fsdp=False`` drops the FSDP dim (params replicated over the data axes —
+    the TP-only layout used for weight-resident decode, §Perf iteration B4).
+    """
+    tpl = (None,) * (len(shape) - len(template)) + tuple(template)
+    out, used = [], set()
+    for dim, name in zip(shape, tpl):
+        if name is None or (name == "fsdp" and not fsdp):
+            out.append(None)
+            continue
+        axes = fsdp_axes(mesh) if name == "fsdp" else ("model",)
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        if axes and dim % _axis_size(mesh, axes) == 0:
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _leaf_path(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_specs(params_shape: PyTree, mesh: Mesh, *, fsdp: bool = True) -> PyTree:
+    """NamedSharding pytree for a params (or ShapeDtypeStruct) pytree."""
+    def spec_for(path, leaf):
+        name = _leaf_path(path)
+        for pat, tpl in _RULES:
+            if re.search(pat, name):
+                return NamedSharding(mesh,
+                                     _resolve(tpl, leaf.shape, mesh, fsdp=fsdp))
+        return NamedSharding(mesh, P())          # replicate (norms, scalars…)
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def batch_specs(batch_shape: PyTree, mesh: Mesh) -> PyTree:
+    """Shard every batch leaf's batch dim over (pod, data).
+
+    Handles the (3, B, S) mrope-positions layout (batch at axis 1).
+    """
+    ba = batch_axes(mesh)
+
+    def spec_for(path, leaf):
+        name = _leaf_path(path)
+        bdim = 1 if name.endswith("mrope_positions") else 0
+        spec = [None] * len(leaf.shape)
+        if leaf.shape[bdim] % _axis_size(mesh, ba) == 0:
+            spec[bdim] = ba if len(ba) > 1 else ba[0]
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)
+
+
+def decode_cache_specs(cache_shape: PyTree, mesh: Mesh, *,
+                       kv_shard: str = "heads") -> PyTree:
+    """Cache pytree specs. Leaves are (L, B, ...) stacked; pos is scalar."""
+    ba = batch_axes(mesh)
+    assert kv_shard in ("heads", "seq")
+
+    def spec_for(path, leaf):
+        name = _leaf_path(path)
+        if leaf.ndim == 0:                       # pos scalar
+            return NamedSharding(mesh, P())
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2 and leaf.shape[1] % _axis_size(mesh, ba) == 0:
+            spec[1] = ba if len(ba) > 1 else ba[0]     # batch dim
+        msize = mesh.shape.get("model", 1)
+        if re.search(r"(^|/)(k|v|cross_k|cross_v)$", name) and leaf.ndim == 5:
+            # (L, B, W, KH, dh)
+            if kv_shard == "seq" and leaf.shape[2] % msize == 0:
+                spec[2] = "model"
+            elif kv_shard == "heads" and leaf.shape[3] % msize == 0:
+                spec[3] = "model"
+        elif re.search(r"/(state|ssm_state)$", name) and leaf.ndim >= 3:
+            if leaf.shape[2] % msize == 0:       # heads dim of the state
+                spec[2] = "model"
+        elif re.search(r"/conv_tail$", name) and leaf.ndim == 4:
+            if leaf.shape[3] % msize == 0:       # d_inner
+                spec[3] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,4 @@
+"""Training substrate: optimizers, train loop, checkpointing."""
+from repro.training.optimizer import Adam, AdamState, apply_updates, cosine_schedule, global_norm
+from repro.training.train_loop import make_train_step, train
+from repro.training.checkpoint import load_checkpoint, save_checkpoint

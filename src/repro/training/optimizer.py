@@ -1,0 +1,93 @@
+"""Optimizers in pure JAX (no optax dependency): Adam / AdamW + utilities.
+
+API mirrors the optax triple: ``init(params) -> state``,
+``update(grads, state, params) -> (updates, state)``; ``apply_updates`` adds.
+States are pytrees of f32 so they shard like the params they track.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclass(frozen=True)
+class Adam:
+    learning_rate: Any = 1e-3          # float or callable(step) -> lr
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0          # AdamW when > 0
+    clip_norm: Optional[float] = None  # global-norm clipping
+
+    def init(self, params: PyTree) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(zeros, params),
+                         nu=jax.tree.map(zeros, params))
+
+    def _lr(self, step):
+        return (self.learning_rate(step) if callable(self.learning_rate)
+                else self.learning_rate)
+
+    def update(self, grads: PyTree, state: AdamState,
+               params: Optional[PyTree] = None) -> Tuple[PyTree, AdamState]:
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2)
+                          * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        sf = step.astype(jnp.float32)
+        mhat_c = 1.0 / (1 - b1 ** sf)
+        nhat_c = 1.0 / (1 - b2 ** sf)
+        lr = self._lr(step)
+
+        def upd(m, n, p):
+            u = -lr * (m * mhat_c) / (jnp.sqrt(n * nhat_c) + self.eps)
+            if self.weight_decay and p is not None:
+                u = u - lr * self.weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is None:
+            updates = jax.tree.map(lambda m, n: upd(m, n, None), mu, nu)
+        else:
+            updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = base_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5
+                         * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

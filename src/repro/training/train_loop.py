@@ -1,0 +1,96 @@
+"""LM training loop: jitted train_step (loss + grad + Adam) and a driver.
+
+``make_train_step`` is also the function the multi-pod dry-run lowers for the
+``train_4k`` input shape, so it is kept pure and shardable: (params, opt_state,
+batch) -> (params, opt_state, metrics).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import lm_loss
+from repro.training.optimizer import Adam, AdamState, apply_updates, global_norm
+
+PyTree = Any
+
+
+def _split_micro(batch: Dict[str, jax.Array], n: int) -> Dict[str, jax.Array]:
+    """Reshape every leaf's batch dim into (n, B/n, ...) for a microbatch scan
+    (mrope_positions carries batch at axis 1)."""
+    out = {}
+    for k, v in batch.items():
+        if k == "mrope_positions":          # (3, B, S) -> (n, 3, B/n, S)
+            b = v.shape[1]
+            out[k] = v.reshape(v.shape[0], n, b // n, *v.shape[2:]).swapaxes(0, 1)
+        else:
+            b = v.shape[0]
+            out[k] = v.reshape(n, b // n, *v.shape[1:])
+    return out
+
+
+def make_train_step(cfg: ModelConfig, opt: Adam, *, attn_impl: str = "chunked",
+                    remat: str = "full", microbatch: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatch > 1`` runs gradient accumulation over a ``lax.scan`` of
+    batch slices — §Perf iteration 6: peak activation memory scales with
+    B/microbatch while HBM traffic and collective volume stay ~constant
+    (the lever that fits the large-vocab MoE trains into 16 GB/chip).
+    """
+    def train_step(params: PyTree, opt_state: AdamState,
+                   batch: Dict[str, jax.Array]):
+        def loss_fn(p, mb):
+            return lm_loss(p, cfg, mb, attn_impl=attn_impl, remat=remat)
+
+        if microbatch == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = _split_micro(batch, microbatch)
+
+            def body(acc, mb):
+                g_acc, l_acc = acc
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(body, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = loss / microbatch
+            metrics = {}
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=global_norm(grads))
+        return params, opt_state, metrics
+    return train_step
+
+
+def train(cfg: ModelConfig, params: PyTree, batches: Iterable[Dict], *,
+          opt: Optional[Adam] = None, steps: int = 100,
+          log_every: int = 10, attn_impl: str = "chunked",
+          remat: str = "full", log_fn=print) -> Tuple[PyTree, list]:
+    """CPU-scale driver (examples / smoke). Returns (params, history)."""
+    opt = opt or Adam(learning_rate=3e-4, clip_norm=1.0)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt, attn_impl=attn_impl,
+                                      remat=remat))
+    history = []
+    t0 = time.perf_counter()
+    for i, batch in enumerate(batches):
+        if i >= steps:
+            break
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"], m["wall_s"] = i, time.perf_counter() - t0
+            history.append(m)
+            log_fn(f"step {i:5d} loss {m['loss']:.4f} "
+                   f"gnorm {m['grad_norm']:.3f} ({m['wall_s']:.1f}s)")
+    return params, history

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Smoke tests and benches must see ONE device — the 512-device override is
+# exclusively for launch/dryrun.py (per the multi-pod dry-run contract).
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

@@ -1,0 +1,71 @@
+"""Dry-run plumbing on a 1-device CPU mesh: the same lower()+compile path the
+512-device dry-run uses, exercised at smoke scale so it stays test-covered
+(the real meshes are covered by results/dryrun_baseline artifacts)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs import INPUT_SHAPES, get_smoke_config
+from repro.launch.analysis import analyze, model_flops_estimate
+from repro.models import transformer as tfm
+from repro.models.model import batch_spec
+from repro.sharding.annotate import DEFAULT_RULES, logical_axis_rules
+from repro.sharding.specs import batch_specs, param_specs, decode_cache_specs
+from repro.training.optimizer import Adam
+from repro.training.train_loop import make_train_step
+
+
+def _mesh():
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_3b", "olmoe_1b_7b", "rwkv6_7b"])
+def test_train_step_lowers_and_compiles_on_mesh(arch):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    mesh = _mesh()
+    p_shape = jax.eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = param_specs(p_shape, mesh)
+    opt = Adam(learning_rate=1e-3)
+    o_shape = jax.eval_shape(opt.init, p_shape)
+    from repro.sharding.specs import replicated
+    o_specs = type(o_shape)(step=replicated(mesh),
+                            mu=param_specs(o_shape.mu, mesh),
+                            nu=param_specs(o_shape.nu, mesh))
+    from repro.models.model import example_batch
+    b_shape = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in
+               example_batch(cfg, 2, 64, jax.random.PRNGKey(1)).items()}
+    b_specs = batch_specs(b_shape, mesh)
+    with mesh, logical_axis_rules(mesh, DEFAULT_RULES):
+        step = make_train_step(cfg, opt, remat="none", microbatch=2)
+        lowered = jax.jit(step, in_shardings=(p_specs, o_specs, b_specs),
+                          out_shardings=(p_specs, o_specs, None)).lower(
+                              p_shape, o_shape, b_shape)
+        compiled = lowered.compile()
+    rl = analyze(compiled, arch=arch, shape="smoke", mesh_name="cpu1x1",
+                 n_devices=1,
+                 model_flops=6.0 * cfg.active_param_count() * 2 * 64)
+    assert rl.flops_per_device > 0
+    assert rl.bytes_per_device > 0
+    assert rl.bottleneck in ("compute", "memory", "collective")
+
+
+def test_decode_step_lowers_with_cache_specs():
+    cfg = get_smoke_config("llama3_2_3b").replace(dtype="float32")
+    mesh = _mesh()
+    p_shape = jax.eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = param_specs(p_shape, mesh)
+    cache_shape = jax.eval_shape(lambda: tfm.init_cache(cfg, 2, 128))
+    for kv_shard in ("heads", "seq"):
+        c_specs = decode_cache_specs(cache_shape, mesh, kv_shard=kv_shard)
+        token = jax.ShapeDtypeStruct((2, 1), np.int32)
+        with mesh, logical_axis_rules(mesh, DEFAULT_RULES):
+            def serve_step(params, cache, tok):
+                return tfm.decode_step(params, cfg, cache, tok)
+            compiled = jax.jit(serve_step,
+                               in_shardings=(p_specs, c_specs, None),
+                               out_shardings=(None, c_specs),
+                               donate_argnums=(1,)).lower(
+                                   p_shape, cache_shape, token).compile()
+        assert compiled is not None

@@ -1,0 +1,115 @@
+"""Predictor units: losses, pairing filter, Kendall τ_b, backbones."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.predictor import (HashTokenizer, PredictorConfig,
+                                  build_pairs, init_predictor,
+                                  kendall_tau_b, l1_pointwise_loss,
+                                  listmle_loss, margin_ranking_loss,
+                                  min_length_difference, predictor_forward)
+
+
+# ------------------------------------------------------------------- losses
+def test_margin_ranking_loss_values():
+    s_a = jnp.array([2.0, 0.0])
+    s_b = jnp.array([0.0, 2.0])
+    y = jnp.array([1.0, 1.0])     # A should outrank B
+    # pair 1: correct by 2 ≥ margin → 0 ; pair 2: wrong by 2 → 2+1 = 3
+    assert float(margin_ranking_loss(s_a, s_b, y, margin=1.0)) == pytest.approx(1.5)
+
+
+def test_margin_loss_zero_when_separated():
+    s_a, s_b = jnp.array([5.0]), jnp.array([0.0])
+    assert float(margin_ranking_loss(s_a, s_b, jnp.array([1.0]))) == 0.0
+    assert float(margin_ranking_loss(s_b, s_a, jnp.array([-1.0]))) == 0.0
+
+
+def test_listmle_prefers_correct_order():
+    lengths = jnp.array([[3.0, 2.0, 1.0]])
+    good = jnp.array([[3.0, 2.0, 1.0]])   # scores aligned with lengths
+    bad = jnp.array([[1.0, 2.0, 3.0]])
+    assert float(listmle_loss(good, lengths)) < float(listmle_loss(bad, lengths))
+
+
+def test_l1_pointwise_is_scaled_mae():
+    s = jnp.array([1.0, 2.0])
+    L = jnp.array([100.0, 300.0])
+    assert float(l1_pointwise_loss(s, L)) == pytest.approx(0.5)
+
+
+# ------------------------------------------------------------------ pairing
+def test_min_length_difference_formula():
+    # paper eq. (1): |L_A - L_B| / max(L_A, L_B)
+    np.testing.assert_allclose(min_length_difference([100], [80]), [0.2])
+    np.testing.assert_allclose(min_length_difference([80], [100]), [0.2])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 10_000), min_size=4, max_size=300),
+       st.floats(0.0, 0.9))
+def test_build_pairs_respects_delta(lengths, delta):
+    lengths = np.asarray(lengths, np.float64)
+    ia, ib, y = build_pairs(lengths, np.random.default_rng(0),
+                            n_pairs=200, delta=delta)
+    assert len(ia) == len(ib) == len(y)
+    if len(ia):
+        mld = min_length_difference(lengths[ia], lengths[ib])
+        assert np.all(mld >= delta - 1e-12)
+        assert np.all(y == np.where(lengths[ia] > lengths[ib], 1.0, -1.0))
+        assert np.all(ia != ib)
+
+
+# ------------------------------------------------------------------ tau
+def test_kendall_tau_perfect_and_inverse():
+    x = [1, 2, 3, 4, 5]
+    assert kendall_tau_b(x, x) == pytest.approx(1.0)
+    assert kendall_tau_b(x, x[::-1]) == pytest.approx(-1.0)
+
+
+def test_kendall_tau_ties_match_scipy_convention():
+    # hand-checked tau_b with ties
+    x = [1, 2, 2, 3]
+    y = [1, 3, 2, 4]
+    # pairs: n0=6, ties in x: 1 → n1=1; none in y. nc: compare all non-tied-x
+    # (1,2)+,(1,2)+,(1,3)+,(2,3)+,(2,3)+ → nc=5, nd=0
+    expected = 5 / np.sqrt(5 * 6)
+    assert kendall_tau_b(x, y) == pytest.approx(expected)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=2, max_size=60))
+def test_kendall_tau_bounded_and_symmetric(xs):
+    ys = list(reversed(xs))
+    t = kendall_tau_b(xs, ys)
+    assert -1.0 - 1e-9 <= t <= 1.0 + 1e-9
+    assert kendall_tau_b(xs, xs) >= 0.0 or len(set(xs)) == 1
+
+
+# ------------------------------------------------------------- backbones
+@pytest.mark.parametrize("backbone", ["bert", "opt", "t5"])
+def test_backbone_forward_shape_and_pad_invariance(backbone):
+    cfg = PredictorConfig(backbone=backbone)
+    params = init_predictor(jax.random.PRNGKey(0), cfg)
+    tok = HashTokenizer(vocab_size=cfg.vocab_size, max_len=cfg.max_len)
+    toks = jnp.asarray(tok.encode_batch(["explain topic3", "what is topic9"]))
+    scores = predictor_forward(params, cfg, toks)
+    assert scores.shape == (2,)
+    assert np.all(np.isfinite(np.asarray(scores)))
+    # trailing PAD must not affect the score (mask correctness)
+    ids = tok.encode("explain topic3")
+    a = np.zeros((1, cfg.max_len), np.int32)
+    a[0, :len(ids)] = ids
+    b = a.copy()                                  # identical, full PAD tail
+    s1 = predictor_forward(params, cfg, jnp.asarray(a))
+    s2 = predictor_forward(params, cfg, jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_tokenizer_deterministic_and_bounded():
+    tok = HashTokenizer()
+    a = tok.encode_batch(["Explain topic3!", "explain TOPIC3"])
+    assert (a[0] == a[1]).all()                  # case/punct-insensitive
+    assert a.max() < tok.vocab_size and a.min() >= 0

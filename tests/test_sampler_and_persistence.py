@@ -1,0 +1,86 @@
+"""Sampler correctness + predictor checkpoint roundtrip + linear-attention
+state-handoff properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.sampler import SamplerConfig, sample
+
+
+def test_greedy_sampler_is_argmax():
+    logits = jnp.asarray([[0.1, 2.0, -1.0], [3.0, 0.0, 0.0]])
+    out = sample(logits, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(out), [1, 0])
+
+
+def test_top_k_restricts_support():
+    logits = jnp.asarray([0.0, 1.0, 2.0, 3.0])
+    cfg = SamplerConfig(temperature=1.0, top_k=2)
+    draws = {int(sample(logits, jax.random.PRNGKey(i), cfg)) for i in range(64)}
+    assert draws <= {2, 3}
+
+
+def test_top_p_restricts_support():
+    logits = jnp.asarray([10.0, 9.9, -10.0, -10.0])
+    cfg = SamplerConfig(temperature=1.0, top_p=0.9)
+    draws = {int(sample(logits, jax.random.PRNGKey(i), cfg)) for i in range(64)}
+    assert draws <= {0, 1}
+
+
+def test_temperature_sampling_matches_distribution_roughly():
+    logits = jnp.log(jnp.asarray([0.7, 0.2, 0.1]))
+    cfg = SamplerConfig(temperature=1.0)
+    keys = jax.random.split(jax.random.PRNGKey(0), 2000)
+    draws = jax.vmap(lambda k: sample(logits, k, cfg))(keys)
+    freq0 = float(jnp.mean(draws == 0))
+    assert 0.6 < freq0 < 0.8
+
+
+# ----------------------------------------------------- predictor persistence
+def test_predictor_save_load_roundtrip(tmp_path):
+    from repro.core.predictor import TrainSettings, train_predictor
+    from repro.core.predictor.train import RankingPredictor
+    from repro.data.synthetic import make_corpus, sample_lengths
+
+    c = make_corpus("alpaca", 200, seed=0)
+    L = sample_lengths(c, "gpt4")
+    pred = train_predictor(c.prompts, L, settings=TrainSettings(
+        method="pairwise", epochs=1, pairs_per_epoch=512, delta=0.2))
+    path = str(tmp_path / "pred.npz")
+    pred.save(path)
+    pred2 = RankingPredictor.load(path)
+    s1 = pred.score(c.prompts[:16])
+    s2 = pred2.score(c.prompts[:16])
+    np.testing.assert_allclose(s1, s2, rtol=1e-6)
+    assert pred2.method == "pairwise"
+
+
+# --------------------------------------------- linear-attention state handoff
+@pytest.mark.parametrize("mode", ["rwkv", "ssd"])
+def test_chunked_state_handoff_equals_full_pass(mode):
+    """Processing [0:T/2] then [T/2:T] with the carried state must equal one
+    full pass — the invariant prefill-continuation (and the engine) rely on."""
+    from repro.models.linear_attn import chunked_linear_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    b, h, t, d = 2, 2, 128, 32
+    q, k = (jax.random.normal(ks[i], (b, h, t, d)) for i in range(2))
+    v = jax.random.normal(ks[2], (b, h, t, d))
+    lw = -jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, t,
+                                                   d if mode == "rwkv" else 1)))
+    u = jax.random.normal(ks[4], (h, d)) * 0.1 if mode == "rwkv" else None
+
+    full, state_full = chunked_linear_attention(q, k, v, lw, bonus=u,
+                                                mode=mode, chunk_size=32)
+    h1, s1 = chunked_linear_attention(q[:, :, :64], k[:, :, :64],
+                                      v[:, :, :64], lw[:, :, :64],
+                                      bonus=u, mode=mode, chunk_size=32)
+    h2, s2 = chunked_linear_attention(q[:, :, 64:], k[:, :, 64:],
+                                      v[:, :, 64:], lw[:, :, 64:],
+                                      bonus=u, mode=mode, chunk_size=32,
+                                      initial_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], axis=2)),
+                               np.asarray(full), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(state_full),
+                               atol=1e-5, rtol=1e-5)

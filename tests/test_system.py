@@ -1,0 +1,55 @@
+"""End-to-end behaviour: the full PARS pipeline (synthetic corpus → pairwise
+predictor → SJF scheduling) must beat FCFS and approach Oracle, per the
+paper's headline claim (fast, reduced-scale variant of benchmarks/)."""
+import numpy as np
+import pytest
+
+from repro.core.predictor import TrainSettings, evaluate_tau, train_predictor
+from repro.core.scheduler.policies import fcfs, make_policy, oracle_sjf
+from repro.core.scheduler.scheduler import Scheduler
+from repro.data.synthetic import make_corpus, sample_lengths
+from repro.data.workload import burst_arrivals, make_requests
+from repro.serving.simulator import run_policy, simulate
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    c_train = make_corpus("alpaca", 800, seed=0)
+    c_test = make_corpus("alpaca", 300, seed=42)
+    L_train = sample_lengths(c_train, "gpt4")
+    L_test = sample_lengths(c_test, "gpt4", run_seed=9)
+    st = TrainSettings(method="pairwise", epochs=2, pairs_per_epoch=2560,
+                       delta=0.2)
+    pred = train_predictor(c_train.prompts, L_train, settings=st)
+    return pred, c_test, L_test
+
+
+def test_predictor_learns_ranking(pipeline):
+    pred, c_test, L_test = pipeline
+    tau = evaluate_tau(pred, c_test.prompts, L_test)
+    assert tau > 0.45, f"pairwise predictor tau too low: {tau}"
+
+
+def test_pars_between_fcfs_and_oracle(pipeline):
+    pred, c_test, L_test = pipeline
+    reqs = make_requests(c_test, L_test, burst_arrivals(300))
+    rep_f = run_policy(reqs, fcfs(), max_batch=16, starvation_threshold=1e9)
+    rep_p = run_policy(reqs, make_policy("pars", pred), max_batch=16,
+                       starvation_threshold=1e9)
+    rep_o = run_policy(reqs, oracle_sjf(), max_batch=16,
+                       starvation_threshold=1e9)
+    # PARS strictly better than FCFS, and ordered toward Oracle
+    assert rep_p.avg_per_token_latency < rep_f.avg_per_token_latency
+    assert rep_o.avg_per_token_latency <= rep_p.avg_per_token_latency * 1.001
+    assert rep_p.p90_per_token_latency < rep_f.p90_per_token_latency
+
+
+def test_starvation_prevention_every_request_completes(pipeline):
+    pred, c_test, L_test = pipeline
+    reqs = make_requests(c_test, L_test, burst_arrivals(300))
+    sched = Scheduler(policy=make_policy("pars", pred), max_batch=16,
+                      starvation_threshold=30.0)
+    fin = simulate(reqs, sched)
+    assert len(fin) == 300
+    waits = np.array([r.start_time - r.arrival_time for r in fin])
+    assert np.isfinite(waits).all()
