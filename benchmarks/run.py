@@ -14,7 +14,8 @@ import time
 import traceback
 
 BENCHES = ("table1", "table2", "table3", "table4", "scheduling",
-           "cross_model", "pars_plus", "starvation", "kernels", "roofline")
+           "cross_model", "pars_plus", "starvation", "kernels", "roofline",
+           "prefill_admission")
 
 
 def main() -> None:
@@ -25,9 +26,10 @@ def main() -> None:
     selected = args.only or BENCHES
 
     from benchmarks import (cross_model, kernel_bench, pars_plus_ablation,
-                            roofline, scheduling_latency, starvation_sweep,
-                            table1_variability, table2_rank_methods,
-                            table3_backbones, table4_filtering)
+                            prefill_admission, roofline, scheduling_latency,
+                            starvation_sweep, table1_variability,
+                            table2_rank_methods, table3_backbones,
+                            table4_filtering)
     runners = {
         "table1": table1_variability.run,
         "table2": table2_rank_methods.run,
@@ -39,6 +41,7 @@ def main() -> None:
         "starvation": starvation_sweep.run,
         "kernels": kernel_bench.run,
         "roofline": roofline.run,
+        "prefill_admission": prefill_admission.run,
     }
     t0 = time.perf_counter()
     failures = []

@@ -19,6 +19,9 @@ def main():
     ap.add_argument("--model", default="llama", choices=list(MODELS))
     ap.add_argument("--dataset", default="alpaca")
     ap.add_argument("--n", type=int, default=2000)
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="bound the simulated KV cache (16-token blocks; "
+                    "0 = unbounded) — admission defers under pressure")
     args = ap.parse_args()
 
     train_c = make_corpus(args.dataset, 1500, seed=0)
@@ -35,7 +38,9 @@ def main():
     L = sample_lengths(test_c, args.model, run_seed=2)
     reqs = make_requests(test_c, L, burst_arrivals(args.n))
 
-    print(f"\n{args.dataset}/{args.model}: burst n={args.n}, batch=16")
+    kv = args.kv_blocks or None
+    print(f"\n{args.dataset}/{args.model}: burst n={args.n}, batch=16"
+          + (f", kv_blocks={kv}" if kv else ""))
     reports = {}
     for name, pol in [
         ("fcfs", fcfs()),
@@ -44,7 +49,7 @@ def main():
         ("pars", make_policy("pars", preds["pairwise"])),
         ("oracle", oracle_sjf()),
     ]:
-        reports[name] = run_policy(reqs, pol, max_batch=16)
+        reports[name] = run_policy(reqs, pol, max_batch=16, kv_blocks=kv)
         print("  " + reports[name].row())
     f, p = reports["fcfs"], reports["pars"]
     print(f"\nPARS speedup vs FCFS: avg "

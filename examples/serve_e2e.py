@@ -14,8 +14,9 @@ from repro.core.predictor import TrainSettings, train_predictor
 from repro.core.scheduler.policies import fcfs, make_policy, oracle_sjf
 from repro.data.synthetic import make_corpus, sample_lengths
 from repro.data.workload import burst_arrivals, make_requests
+from repro.core.scheduler.scheduler import Scheduler
 from repro.models import transformer as tfm
-from repro.serving import serve
+from repro.serving import Engine, report
 
 
 def main():
@@ -26,6 +27,8 @@ def main():
                     help="smoke-config family to serve")
     ap.add_argument("--max-len", type=int, default=120,
                     help="clip ground-truth lengths for CPU wall-clock")
+    ap.add_argument("--seq-prefill", action="store_true",
+                    help="disable bucketed prefill (one dispatch per request)")
     args = ap.parse_args()
 
     # the served LM (reduced config of the selected family, real weights)
@@ -49,9 +52,16 @@ def main():
           f"real wall-clock:")
     for pol in [fcfs(), make_policy("pars", pred), oracle_sjf()]:
         reqs = make_requests(test_c, lengths, burst_arrivals(args.requests))
-        rep = serve(cfg, params, reqs, pol, max_batch=args.batch,
-                    cache_len=256)
+        sched = Scheduler(policy=pol, max_batch=args.batch)
+        eng = Engine(cfg, params, sched, cache_len=256,
+                     bucketed=not args.seq_prefill)
+        eng.submit(reqs)
+        finished = eng.run()
+        rep = report(pol.name, finished)
         print("  " + rep.row())
+        print(f"    admission: {eng.backend.prefill_requests} prefills in "
+              f"{eng.backend.prefill_dispatches} dispatches "
+              f"({eng.backend.prefill_seconds * 1e3:.0f} ms)")
 
 
 if __name__ == "__main__":

@@ -19,7 +19,7 @@ simulator; only the clock source differs.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 from repro.core.scheduler.policies import Policy
 from repro.core.scheduler.request import Request, RequestState
@@ -43,6 +43,14 @@ class Scheduler:
     preemption: bool = False
     preempt_margin: float = 0.0
     max_preemptions: int = 2
+    # KV-budget awareness (installed by ServingCore): ``admit_hook`` is the
+    # admission gate — called in rank order, it reserves cache blocks and
+    # returns False to keep a request in W this cycle (memory back-pressure
+    # without queue surgery). ``evict_hook`` releases a preemption victim's
+    # reservation and backend residency. Both are optional so the scheduler
+    # stays usable standalone in unit tests.
+    admit_hook: Optional[Callable[[Request], bool]] = None
+    evict_hook: Optional[Callable[[Request], None]] = None
     waiting: List[Request] = field(default_factory=list)
     running: List[Request] = field(default_factory=list)
 
@@ -88,13 +96,33 @@ class Scheduler:
             return []
         self._boost(now)
         self._rank()
-        admitted = self.waiting[:free]
-        del self.waiting[:free]
+        if self.admit_hook is None:
+            admitted = self.waiting[:free]
+            del self.waiting[:free]
+        else:
+            admitted, kept = [], []
+            for i, r in enumerate(self.waiting):
+                if len(admitted) == free:
+                    kept.extend(self.waiting[i:])
+                    break
+                (admitted if self.admit_hook(r) else kept).append(r)
+            self.waiting = kept
         for r in admitted:
             r.state = RequestState.RUNNING
             r.start_time = now
         self.running.extend(admitted)
         return admitted
+
+    def defer(self, reqs: List[Request]) -> None:
+        """Return admitted-but-unplaceable requests to the head of W (engine
+        back-pressure through the scheduler API, not queue surgery). The
+        caller is responsible for releasing any resources it reserved."""
+        if not reqs:
+            return
+        self.running = [r for r in self.running if r not in reqs]
+        for r in reqs:
+            r.state = RequestState.WAITING
+        self.waiting[:0] = reqs
 
     def _preempt(self) -> None:
         """Evict worst-running in favour of strictly-better waiting requests
@@ -116,6 +144,8 @@ class Scheduler:
                 self.running.remove(victim)
                 victim.state = RequestState.WAITING
                 victim.preempt_count = getattr(victim, "preempt_count", 0) + 1
+                if self.evict_hook is not None:
+                    self.evict_hook(victim)
                 self.waiting.append(victim)
                 self._rank()
             else:

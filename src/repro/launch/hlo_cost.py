@@ -126,13 +126,18 @@ def parse_computations(hlo: str) -> Dict[str, Computation]:
     return comps
 
 
+# operands may carry inline type annotations, e.g.
+# dot(f32[128,128]{1,0} %Arg_0.1, f32[128,128]{1,0} %Arg_1.2, …)
+_OPERAND_TYPE = r"(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?\s+)?"
+
+
 def _dot_flops(op: Op, symbols: Dict[str, str]) -> float:
     res_elems = _nelems(_shapes(op.result_text))
-    lhs_m = re.search(r"dot\(%?([\w.\-]+)", op.rest)
+    lhs_m = re.search(r"dot\((" + _OPERAND_TYPE + r")%?([\w.\-]+)", op.rest)
     cdims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
     if not lhs_m or not cdims_m:
         return 2.0 * res_elems                       # degenerate
-    lhs_shape_text = symbols.get(lhs_m.group(1), "")
+    lhs_shape_text = lhs_m.group(1) or symbols.get(lhs_m.group(2), "")
     shp = _shapes(lhs_shape_text)
     if not shp:
         return 2.0 * res_elems
@@ -155,10 +160,14 @@ def _is_pure_convert(comp: "Computation") -> bool:
 
 
 def _dus_bytes(op: "Op", comp: "Computation") -> int:
-    om = re.search(r"dynamic-update-slice\(%?[\w.\-]+,\s*%?([\w.\-]+)", op.rest)
+    om = re.search(r"dynamic-update-slice\(" + _OPERAND_TYPE +
+                   r"%?[\w.\-]+,\s*(" + _OPERAND_TYPE + r")%?([\w.\-]+)",
+                   op.rest)
     if not om:
         return 0
-    return _nbytes(_shapes(comp.symbols.get(om.group(1), "")))
+    if om.group(1):                    # update operand's type is inline
+        return _nbytes(_shapes(om.group(1)))
+    return _nbytes(_shapes(comp.symbols.get(om.group(2), "")))
 
 
 @dataclass

@@ -35,6 +35,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=120)
     ap.add_argument("--starvation", type=float, default=120.0)
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="KV cache budget in 16-token blocks "
+                    "(0 = max_batch lanes of cache_len)")
+    ap.add_argument("--seq-prefill", action="store_true",
+                    help="disable bucketed prefill (one dispatch per request)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).replace(dtype="float32", vocab_size=2048)
@@ -59,7 +64,9 @@ def main():
     reqs = make_requests(c, lengths, arrivals)
 
     rep = serve(cfg, params, reqs, policy, max_batch=args.batch,
-                cache_len=256, starvation_threshold=args.starvation)
+                cache_len=256, starvation_threshold=args.starvation,
+                kv_blocks=args.kv_blocks or None,
+                bucketed=not args.seq_prefill)
     print(rep.row())
 
 

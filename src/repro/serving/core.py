@@ -1,0 +1,184 @@
+"""Unified serving step loop shared by the real JAX engine and the simulator.
+
+Both execution modes used to hand-roll their own loop, and the two drifted:
+the engine enforced the KV budget by reaching into the scheduler's queues,
+while the simulator ignored the ``BlockAllocator`` entirely. ``ServingCore``
+owns the one canonical cycle —
+
+    arrival delivery → KV-aware admission → prefill → decode → retirement
+
+— parameterized by an :class:`ExecutionBackend` (the jitted JAX engine or the
+calibrated cost model) and a :class:`Clock` (wall time or discrete-event
+time). KV back-pressure lives in the scheduling path itself: the core installs
+an ``admit_hook`` on the scheduler that reserves cache blocks at admission
+time, so a request that doesn't fit simply stays in W — no queue surgery, in
+either mode. Preemption evictions release their reservation through the
+scheduler's ``evict_hook`` the same way.
+
+New serving behavior (chunked prefill, prefix caching, multi-replica
+dispatch) lands here once and both modes inherit it.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, List, Optional, Protocol, Sequence
+
+from repro.core.scheduler.request import Request
+from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.kv_cache import BlockAllocator
+
+
+class Clock(Protocol):
+    def now(self) -> float: ...
+    def wait_until(self, t: float) -> None: ...
+
+
+class WallClock:
+    """Real time, origin at construction."""
+
+    def __init__(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def wait_until(self, t: float) -> None:
+        # short sleep, then re-check: arrivals are delivered by the run loop
+        if t > self.now():
+            time.sleep(min(1e-4, max(t - self.now(), 0.0)))
+
+
+class VirtualClock:
+    """Discrete-event time: advances only when the loop says so."""
+
+    def __init__(self, t: float = 0.0) -> None:
+        self.t = t
+
+    def now(self) -> float:
+        return self.t
+
+    def wait_until(self, t: float) -> None:
+        self.t = max(self.t, t)
+
+
+class ExecutionBackend(Protocol):
+    """What a backend must provide; see ``RealBackend`` / ``SimBackend``."""
+
+    def attach(self, core: "ServingCore") -> None: ...
+
+    def kv_demand(self, req: Request) -> int:
+        """Tokens of KV cache this request will occupy while resident."""
+        ...
+
+    def prefill(self, admitted: Sequence[Request], now: float) -> float:
+        """Process newly admitted requests; returns the updated time."""
+        ...
+
+    def decode(self, now: float) -> float:
+        """Advance every running request one token; returns the updated time."""
+        ...
+
+    def release(self, req: Request) -> None:
+        """Free backend residency (slot, …) for a retired/evicted request."""
+        ...
+
+
+class ServingCore:
+    """The single KV-aware step loop behind the engine and the simulator."""
+
+    def __init__(self, scheduler: Scheduler, backend: ExecutionBackend, *,
+                 allocator: Optional[BlockAllocator] = None,
+                 clock: Optional[Clock] = None) -> None:
+        self.scheduler = scheduler
+        self.backend = backend
+        self.allocator = allocator or BlockAllocator.unbounded()
+        self.clock: Clock = clock or WallClock()
+        self.finished: List[Request] = []
+        self._pending: Deque[Request] = deque()
+        scheduler.admit_hook = self._reserve
+        scheduler.evict_hook = self._evict
+        backend.attach(self)
+
+    # ------------------------------------------------------------------ api
+    def submit(self, requests: Sequence[Request]) -> None:
+        self._pending = deque(sorted([*self._pending, *requests],
+                                     key=lambda r: r.arrival_time))
+
+    # ---------------------------------------------------------------- hooks
+    def _reserve(self, req: Request) -> bool:
+        """Scheduler admission gate: reserve KV blocks or keep the request
+        in W (memory back-pressure, identical in both execution modes)."""
+        need = self.backend.kv_demand(req)
+        if not self.allocator.can_allocate(need):
+            return False
+        self.allocator.allocate(req.req_id, need)
+        return True
+
+    def _evict(self, req: Request) -> None:
+        """Preemption eviction: blocks and backend residency come back."""
+        self.allocator.free(req.req_id)
+        self.backend.release(req)
+
+    def _retire(self, now: float) -> None:
+        for r in self.scheduler.retire_finished(now):
+            self.allocator.free(r.req_id)
+            self.backend.release(r)
+            self.finished.append(r)
+
+    # ----------------------------------------------------------------- loop
+    def step(self, now: float) -> float:
+        """One serving cycle: admit → prefill → decode → retire."""
+        admitted = self.scheduler.schedule(now)
+        if admitted:
+            now = self.backend.prefill(admitted, now)
+            self._retire(now)            # true_length == 1 finishes at prefill
+        if self.scheduler.running:
+            now = self.backend.decode(now)
+            self._retire(now)
+        return now
+
+    def run(self, *, max_time: float = float("inf"), log_every: float = 0.0,
+            log_fn=print) -> List[Request]:
+        """Serve everything submitted; returns the finished requests."""
+        last_log = 0.0
+        total = len(self._pending) + len(self.finished) + \
+            len(self.scheduler.waiting) + len(self.scheduler.running)
+        while self._pending or self.scheduler.has_work:
+            now = self.clock.now()
+            if now >= max_time:
+                break
+            arrived = []
+            while self._pending and self._pending[0].arrival_time <= now:
+                arrived.append(self._pending.popleft())
+            if arrived:
+                self.scheduler.add_requests(arrived)
+            if not self.scheduler.has_work:
+                self.clock.wait_until(self._pending[0].arrival_time)
+                continue
+            running_before = bool(self.scheduler.running)
+            finished_before = len(self.finished)
+            new_now = self.step(now)
+            progressed = (new_now != now or running_before
+                          or self.scheduler.running
+                          or len(self.finished) > finished_before)
+            if not progressed:
+                # KV gate rejected everything and nothing is executing
+                if self._pending:
+                    self.clock.wait_until(self._pending[0].arrival_time)
+                    continue
+                need = min(self.backend.kv_demand(r)
+                           for r in self.scheduler.waiting)
+                raise MemoryError(
+                    f"KV budget can never admit remaining requests: min "
+                    f"demand {self.allocator.blocks_for(need)} blocks, "
+                    f"capacity {self.allocator.total_blocks}")
+            self.clock.wait_until(new_now)
+            if log_every and new_now - last_log > log_every:
+                last_log = new_now
+                log_fn(f"[core t={new_now:8.2f}s] "
+                       f"running={len(self.scheduler.running)} "
+                       f"waiting={len(self.scheduler.waiting)} "
+                       f"finished={len(self.finished)}/{total}")
+        self._retire(self.clock.now())
+        return self.finished

@@ -1,25 +1,30 @@
-"""Real JAX serving engine: continuous batching over a slot-resident KV cache.
+"""Real JAX serving backend: continuous batching over a slot-resident KV cache.
 
 This is the integration the paper performs in vLLM, rebuilt TPU-idiomatically
-(DESIGN.md §4): a fixed-capacity running batch of ``max_batch`` slots with
-static shapes; admission = one-request prefill + ``at[slot].set`` into the
-batch cache; completion = slot free + allocator release. Decode is a single
-jitted, per-slot-position ``vmap`` of the model's one-token step, so slots at
-different sequence positions advance together in one TPU program.
+(DESIGN.md §4) on top of the shared :class:`~repro.serving.core.ServingCore`
+step loop: a fixed-capacity running batch of ``max_batch`` slots with static
+shapes. The scheduler (and therefore PARS itself) is byte-identical to the
+simulator path — only the backend and the clock differ.
 
-The scheduler (and therefore PARS itself) is byte-identical to the simulator
-path — only the clock is real here.
+Admission is **batched and prompt-length-bucketed**: the K requests admitted
+in a cycle are padded to a small set of power-of-two token buckets and each
+bucket runs as *one* jitted ``forward_seq`` (batch dimension also padded to a
+power of two, so the set of compiled shapes is bounded) instead of K
+sequential per-request dispatches. Decode gathers only the *active* slots
+into a power-of-two-sized compact batch — idle lanes are never computed —
+runs one jitted step, and scatters back. Padding lanes replay an active lane
+with the same per-slot RNG key, so duplicate scatter writes are idempotent.
 
-Prompt handling: prompts are hash-tokenized and padded/truncated to a fixed
-``prompt_len`` bucket. Completion length follows the request's ground-truth
-``true_length`` (the forced-length protocol, DESIGN.md §3) — the engine
-generates real tokens, but *when* a request finishes is the workload's ground
-truth, exactly as in the paper's trace-driven evaluation.
+Prompt handling: prompts are hash-tokenized into their bucket. Completion
+length follows the request's ground-truth ``true_length`` (the forced-length
+protocol, DESIGN.md §3) — the engine generates real tokens, but *when* a
+request finishes is the workload's ground truth, exactly as in the paper's
+trace-driven evaluation.
 """
 from __future__ import annotations
 
 import time
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -30,166 +35,272 @@ from repro.core.predictor.tokenizer import HashTokenizer
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
 from repro.models import transformer as tfm
+from repro.serving.core import ServingCore, WallClock
 from repro.serving.kv_cache import BlockAllocator
 from repro.serving.metrics import LatencyReport, report
 from repro.serving.sampler import SamplerConfig, sample
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+class RealBackend:
+    """Jitted prefill/decode over a slot-resident cache (ExecutionBackend)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int,
+                 cache_len: int = 512, prompt_len: int = 32,
+                 tokenizer: Optional[HashTokenizer] = None,
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
+                 bucketed: bool = True, min_bucket: int = 8):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.prompt_len = prompt_len
+        self.bucketed = bucketed
+        self.min_bucket = min(min_bucket, prompt_len)
+        self.tok = tokenizer or HashTokenizer(
+            vocab_size=min(cfg.vocab_size, 2048), max_len=prompt_len)
+        self._key = jax.random.PRNGKey(seed)
+        self.core: Optional[ServingCore] = None
+
+        # --- slot state ------------------------------------------------------
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self._slot_of: Dict[int, int] = {}
+        self.slot_tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        row_cache = jax.eval_shape(lambda: tfm.init_cache(cfg, 1, cache_len))
+        self.cache = jax.tree.map(
+            lambda l: jnp.zeros((max_batch,) + l.shape, l.dtype), row_cache)
+
+        # --- instrumentation -------------------------------------------------
+        self.prefill_dispatches = 0   # jitted forward_seq launches
+        self.prefill_requests = 0     # requests admitted through them
+        self.prefill_seconds = 0.0    # wall time spent in admission
+
+        # --- jitted programs -------------------------------------------------
+        sampler_cfg = sampler
+
+        @jax.jit
+        def _prefill_bucket(params, tokens, slot_ids, key):
+            """One bucket: tokens (B, bucket_len) → (next token (B,), cache).
+
+            Per-slot keys (``fold_in``) make padding lanes that replay lane 0
+            sample the same token, keeping duplicate scatters idempotent."""
+            logits, cache, _ = tfm.forward_seq(
+                params, cfg, tokens, build_cache=True, cache_len=cache_len,
+                remat="none")
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(slot_ids)
+            nxt = jax.vmap(lambda lg, k: sample(lg, k, sampler_cfg))(
+                logits[:, -1], keys)
+            return nxt, cache
+
+        @jax.jit
+        def _place(full_cache, bucket_cache, full_tokens, nxt, slot_ids):
+            """Scatter a prefilled bucket's rows into their slots."""
+            def put(full, new):
+                if new.ndim == 0:          # cache position: scalar per slot
+                    return full.at[slot_ids].set(new)
+                # (L, B, ...) bucket leaf → (B, L, 1, ...) slot rows
+                return full.at[slot_ids].set(
+                    jnp.expand_dims(jnp.moveaxis(new, 1, 0), 2))
+            new_cache = jax.tree.map(put, full_cache, bucket_cache)
+            return new_cache, full_tokens.at[slot_ids].set(nxt[:, None])
+
+        @jax.jit
+        def _decode_active(params, cache, tokens, idx, key):
+            """Gather active slots ``idx`` (padded to a power of two with
+            duplicates of idx[0]), decode one token each, scatter back."""
+            sub_cache = jax.tree.map(lambda l: l[idx], cache)
+            sub_tokens = tokens[idx]
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+
+            def one(cache_row, token_row, k):
+                logits, new_row = tfm.decode_step(params, cfg, cache_row,
+                                                  token_row[None])
+                return sample(logits[0], k, sampler_cfg), new_row
+
+            nxt, new_sub = jax.vmap(one)(sub_cache, sub_tokens, keys)
+            new_cache = jax.tree.map(lambda full, sub: full.at[idx].set(sub),
+                                     cache, new_sub)
+            return tokens.at[idx].set(nxt[:, None]), new_cache
+
+        self._prefill_bucket = _prefill_bucket
+        self._place = _place
+        self._decode_active = _decode_active
+
+    # -------------------------------------------------------------- protocol
+    def attach(self, core: ServingCore) -> None:
+        self.core = core
+
+    def kv_demand(self, req: Request) -> int:
+        return self.prompt_len + min(req.true_length, self.cache_len)
+
+    def _bucket_len(self, n_tokens: int) -> int:
+        if not self.bucketed:
+            return self.prompt_len
+        return min(self.prompt_len, _next_pow2(max(n_tokens, self.min_bucket)))
+
+    def bucket_lens(self) -> List[int]:
+        if not self.bucketed:
+            return [self.prompt_len]
+        lens, b = [], self.min_bucket
+        while b < self.prompt_len:
+            lens.append(b)
+            b *= 2
+        return lens + [self.prompt_len]
+
+    def warmup(self) -> float:
+        """Pre-compile the (bucket_len × batch-size) shape grid, vLLM-style,
+        so steady-state admission never pays jit. Returns wall seconds."""
+        t0 = time.perf_counter()
+        key = jax.random.PRNGKey(0)
+        sizes, b = [], 1
+        while b < _next_pow2(self.max_batch):
+            sizes.append(b)
+            b *= 2
+        sizes.append(_next_pow2(self.max_batch))
+        for bl in self.bucket_lens():
+            for bsz in sizes:
+                tokens = jnp.zeros((bsz, bl), jnp.int32)
+                slots = jnp.zeros((bsz,), jnp.int32)
+                nxt, cache = self._prefill_bucket(self.params, tokens, slots,
+                                                  key)
+                self._place(self.cache, cache, self.slot_tokens, nxt, slots)
+        for bsz in sizes:
+            out, _ = self._decode_active(self.params, self.cache,
+                                         self.slot_tokens,
+                                         jnp.zeros((bsz,), jnp.int32), key)
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0
+
+    def _now(self, fallback: float) -> float:
+        return self.core.clock.now() if self.core is not None else fallback
+
+    def prefill(self, admitted: Sequence[Request], now: float) -> float:
+        if not admitted:
+            return now
+        t0 = time.perf_counter()
+        encoded = [(r, [t % self.cfg.vocab_size
+                        for t in self.tok.encode(r.prompt)[:self.prompt_len]])
+                   for r in admitted]
+        if self.bucketed:
+            groups: Dict[int, list] = {}
+            for req, ids in encoded:
+                groups.setdefault(self._bucket_len(len(ids)), []).append(
+                    (req, ids))
+            batches = list(groups.items())
+        else:                          # sequential: one dispatch per request
+            batches = [(self.prompt_len, [pair]) for pair in encoded]
+        for bucket_len, group in batches:
+            b = _next_pow2(len(group))
+            tokens = np.zeros((b, bucket_len), np.int32)
+            slots = np.zeros((b,), np.int32)
+            for j, (req, ids) in enumerate(group):
+                tokens[j, :len(ids)] = ids
+                slot = self.slot_req.index(None)
+                self.slot_req[slot] = req
+                self._slot_of[req.req_id] = slot
+                slots[j] = slot
+            tokens[len(group):] = tokens[0]     # padding lanes replay lane 0
+            slots[len(group):] = slots[0]
+            self._key, sub = jax.random.split(self._key)
+            slots_j = jnp.asarray(slots)
+            nxt, bucket_cache = self._prefill_bucket(
+                self.params, jnp.asarray(tokens), slots_j, sub)
+            self.cache, self.slot_tokens = self._place(
+                self.cache, bucket_cache, self.slot_tokens, nxt, slots_j)
+            self.prefill_dispatches += 1
+            self.prefill_requests += len(group)
+        jax.block_until_ready(self.slot_tokens)
+        self.prefill_seconds += time.perf_counter() - t0
+        now = self._now(now)
+        for req, _ in encoded:
+            # recompute semantics on re-admission after preemption: decode
+            # progress and TTFT are preserved, matching SimBackend
+            if req.tokens_done == 0:
+                req.tokens_done = 1             # prefill emits token 1
+            if req.first_token_time is None:
+                req.first_token_time = now
+        return now
+
+    def decode(self, now: float) -> float:
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return now
+        idx = np.asarray(
+            active + [active[0]] * (_next_pow2(len(active)) - len(active)),
+            np.int32)
+        self._key, sub = jax.random.split(self._key)
+        self.slot_tokens, self.cache = self._decode_active(
+            self.params, self.cache, self.slot_tokens, jnp.asarray(idx), sub)
+        jax.block_until_ready(self.slot_tokens)
+        for i in active:
+            self.slot_req[i].tokens_done += 1
+        return self._now(now)
+
+    def release(self, req: Request) -> None:
+        slot = self._slot_of.pop(req.req_id, None)
+        if slot is not None:
+            self.slot_req[slot] = None
+
+
 class Engine:
+    """RealBackend + ServingCore wiring (the historical engine interface)."""
+
     def __init__(self, cfg: ModelConfig, params, scheduler: Scheduler, *,
                  cache_len: int = 512, prompt_len: int = 32,
                  tokenizer: Optional[HashTokenizer] = None,
                  allocator: Optional[BlockAllocator] = None,
-                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0):
-        self.cfg = cfg
-        self.sampler = sampler
-        self._key = jax.random.PRNGKey(seed)
-        self.params = params
-        self.scheduler = scheduler
-        self.cache_len = cache_len
-        self.prompt_len = prompt_len
-        self.tok = tokenizer or HashTokenizer(
-            vocab_size=min(cfg.vocab_size, 2048), max_len=prompt_len)
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
+                 bucketed: bool = True):
         s = scheduler.max_batch
+        self.scheduler = scheduler
+        self.backend = RealBackend(
+            cfg, params, max_batch=s, cache_len=cache_len,
+            prompt_len=prompt_len, tokenizer=tokenizer, sampler=sampler,
+            seed=seed, bucketed=bucketed)
         self.allocator = allocator or BlockAllocator(
             total_blocks=s * (-(-cache_len // 16)), block_size=16)
-
-        # --- slot state ------------------------------------------------------
-        self.slot_req: List[Optional[Request]] = [None] * s
-        self.slot_tokens = jnp.zeros((s, 1), jnp.int32)
-        row_cache = jax.eval_shape(lambda: tfm.init_cache(cfg, 1, cache_len))
-        self.cache = jax.tree.map(
-            lambda l: jnp.zeros((s,) + l.shape, l.dtype), row_cache)
-        self.finished: List[Request] = []
-
-        # --- jitted programs ---------------------------------------------------
-        sampler_cfg = sampler
-
-        @jax.jit
-        def _prefill(params, tokens, key):
-            logits, cache, _ = tfm.forward_seq(
-                params, cfg, tokens, build_cache=True, cache_len=cache_len,
-                remat="none")
-            nxt = sample(logits[:, -1], key, sampler_cfg)
-            return nxt, cache
-
-        @jax.jit
-        def _decode_all(params, cache, tokens, key):
-            keys = jax.random.split(key, tokens.shape[0])
-            def one(cache_row, token_row, k):
-                logits, new_cache = tfm.decode_step(params, cfg, cache_row,
-                                                    token_row[None])
-                nxt = sample(logits[0], k, sampler_cfg)
-                return nxt, new_cache
-            nxt, new_cache = jax.vmap(one)(cache, tokens, keys)
-            return nxt[:, None], new_cache
-
-        self._prefill = _prefill
-        self._decode_all = _decode_all
-        self._pending: List[Request] = []
+        self.core = ServingCore(scheduler, self.backend,
+                                allocator=self.allocator)
 
     # -------------------------------------------------------------------- api
+    @property
+    def finished(self) -> List[Request]:
+        return self.core.finished
+
     def submit(self, requests: Sequence[Request]) -> None:
-        self._pending.extend(sorted(requests, key=lambda r: r.arrival_time))
+        self.core.submit(requests)
 
-    def _encode_prompt(self, prompt: str) -> jnp.ndarray:
-        ids = self.tok.encode(prompt)[: self.prompt_len]
-        ids = ids + [0] * (self.prompt_len - len(ids))
-        arr = np.asarray(ids, np.int32) % self.cfg.vocab_size
-        return jnp.asarray(arr)[None]
+    def warmup(self) -> float:
+        return self.backend.warmup()
 
-    def _admit(self, req: Request, slot: int) -> None:
-        self.allocator.allocate(
-            req.req_id, self.prompt_len + min(req.true_length, self.cache_len))
-        self._key, sub = jax.random.split(self._key)
-        nxt, row_cache = self._prefill(self.params,
-                                       self._encode_prompt(req.prompt), sub)
-        self.cache = jax.tree.map(
-            lambda full, row: full.at[slot].set(
-                jnp.broadcast_to(row, full.shape[1:])), self.cache, row_cache)
-        self.slot_tokens = self.slot_tokens.at[slot].set(nxt[:1])
-        self.slot_req[slot] = req
-
-    def _retire(self, slot: int, now: float) -> None:
-        req = self.slot_req[slot]
-        req.finish_time = now
-        self.allocator.free(req.req_id)
-        self.slot_req[slot] = None
-        self.finished.append(req)
-
-    # -------------------------------------------------------------------- run
     def run(self, *, time_scale: float = 1.0, log_every: float = 0.0,
             log_fn=print) -> List[Request]:
         """Serve everything submitted; returns finished requests.
 
         ``time_scale`` multiplies trace arrival times (replay a GPU-scale
         trace on CPU without idling)."""
-        t0 = time.perf_counter()
-        clock = lambda: time.perf_counter() - t0
-        last_log = 0.0
-        total = len(self._pending)
-        while self._pending or self.scheduler.has_work:
-            now = clock()
-            while (self._pending
-                   and self._pending[0].arrival_time * time_scale <= now):
-                r = self._pending.pop(0)
+        if time_scale != 1.0:
+            for r in self.core._pending:
                 r.arrival_time *= time_scale
-                self.scheduler.add_request(r)
-            if not self.scheduler.has_work:
-                time.sleep(1e-4)
-                continue
-
-            # admission: scheduler ranks; engine enforces the KV budget
-            admitted = self.scheduler.schedule(now)
-            deferred = []
-            for req in admitted:
-                need = self.prompt_len + min(req.true_length, self.cache_len)
-                if not self.allocator.can_allocate(need):
-                    deferred.append(req)
-                    continue
-                slot = self.slot_req.index(None)
-                self._admit(req, slot)
-                req.tokens_done = 1               # prefill emits token 1
-                req.first_token_time = clock()
-                if req.finished:                  # true_length == 1
-                    self._retire(slot, clock())
-            if deferred:                          # back-pressure → requeue
-                self.scheduler.running = [r for r in self.scheduler.running
-                                          if r not in deferred]
-                self.scheduler.waiting = deferred + self.scheduler.waiting
-
-            if any(s is not None for s in self.slot_req):
-                self._key, sub = jax.random.split(self._key)
-                self.slot_tokens, self.cache = self._decode_all(
-                    self.params, self.cache, self.slot_tokens, sub)
-                jax.block_until_ready(self.slot_tokens)
-                now = clock()
-                for slot, req in enumerate(self.slot_req):
-                    if req is None:
-                        continue
-                    req.tokens_done += 1
-                    if req.finished:
-                        self._retire(slot, now)
-                self.scheduler.retire_finished(now)
-
-            if log_every and clock() - last_log > log_every:
-                last_log = clock()
-                log_fn(f"[engine t={last_log:6.1f}s] "
-                       f"running={len(self.scheduler.running)} "
-                       f"waiting={len(self.scheduler.waiting)} "
-                       f"finished={len(self.finished)}/{total}")
-        return self.finished
+        self.core.clock = WallClock()           # origin = serving start
+        return self.core.run(log_every=log_every, log_fn=log_fn)
 
 
 def serve(cfg: ModelConfig, params, requests: Sequence[Request], policy, *,
           max_batch: int = 8, cache_len: int = 256, prompt_len: int = 32,
           starvation_threshold: float = 120.0, time_scale: float = 1.0,
-          log_every: float = 0.0) -> LatencyReport:
+          log_every: float = 0.0, bucketed: bool = True,
+          kv_blocks: Optional[int] = None) -> LatencyReport:
     """Convenience wrapper: fresh engine + scheduler, serve, report."""
     sched = Scheduler(policy=policy, max_batch=max_batch,
                       starvation_threshold=starvation_threshold)
+    allocator = BlockAllocator(kv_blocks, 16) if kv_blocks else None
     eng = Engine(cfg, params, sched, cache_len=cache_len,
-                 prompt_len=prompt_len)
+                 prompt_len=prompt_len, allocator=allocator,
+                 bucketed=bucketed)
     eng.submit(requests)
     finished = eng.run(time_scale=time_scale, log_every=log_every)
     assert len(finished) == len(requests), (len(finished), len(requests))

@@ -14,11 +14,20 @@ from dataclasses import dataclass, field
 from typing import Dict
 
 
+# Sentinel capacity for accounting-only allocators that never back-pressure
+# (the simulator's default: memory-unbounded unless a budget is requested).
+UNBOUNDED_BLOCKS = 1 << 60
+
+
 @dataclass
 class BlockAllocator:
     total_blocks: int
     block_size: int = 16
     _used: Dict[int, int] = field(default_factory=dict)   # req_id -> blocks
+
+    @classmethod
+    def unbounded(cls, block_size: int = 16) -> "BlockAllocator":
+        return cls(total_blocks=UNBOUNDED_BLOCKS, block_size=block_size)
 
     def blocks_for(self, tokens: int) -> int:
         return -(-max(tokens, 1) // self.block_size)
@@ -26,6 +35,14 @@ class BlockAllocator:
     @property
     def free_blocks(self) -> int:
         return self.total_blocks - sum(self._used.values())
+
+    @property
+    def used_blocks(self) -> int:
+        return sum(self._used.values())
+
+    def reserved(self, req_id: int) -> int:
+        """Blocks currently held by ``req_id`` (0 if none)."""
+        return self._used.get(req_id, 0)
 
     def can_allocate(self, tokens: int) -> bool:
         return self.blocks_for(tokens) <= self.free_blocks

@@ -28,8 +28,19 @@ class LatencyReport:
                 f"ttft={self.avg_ttft:7.2f} s  tput={self.throughput_tok_s:9.1f} tok/s")
 
 
+def _mean(a: np.ndarray) -> float:
+    """NaN-safe mean: empty inputs (e.g. a run where no request records
+    ``first_token_time``) yield NaN without the numpy empty-slice warning."""
+    return float(a.mean()) if len(a) else float("nan")
+
+
 def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
-    assert finished, "no finished requests"
+    if not finished:
+        return LatencyReport(policy=policy, n_requests=0,
+                             avg_per_token_latency=float("nan"),
+                             p90_per_token_latency=float("nan"),
+                             avg_ttft=float("nan"), makespan=0.0,
+                             throughput_tok_s=0.0, mean_wait=float("nan"))
     per_tok = np.array([r.per_token_latency() for r in finished])
     ttft = np.array([(r.first_token_time - r.arrival_time) for r in finished
                      if r.first_token_time is not None])
@@ -41,10 +52,10 @@ def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
     return LatencyReport(
         policy=policy,
         n_requests=len(finished),
-        avg_per_token_latency=float(per_tok.mean()),
+        avg_per_token_latency=_mean(per_tok),
         p90_per_token_latency=float(np.percentile(per_tok, 90)),
-        avg_ttft=float(ttft.mean()) if len(ttft) else float("nan"),
+        avg_ttft=_mean(ttft),
         makespan=float(t1 - t0),
         throughput_tok_s=float(tokens / max(t1 - t0, 1e-9)),
-        mean_wait=float(waits.mean()) if len(waits) else 0.0,
+        mean_wait=_mean(waits),
     )

@@ -1,9 +1,10 @@
-"""Discrete-event continuous-batching simulator.
+"""Discrete-event continuous-batching simulation: ``SimBackend`` + ServingCore.
 
-Replays the *same* ``repro.core.scheduler.Scheduler`` object the real engine
-uses against a calibrated iteration-time model, so 2000-request bursts and
-arrival-rate sweeps (paper §IV-D) run in milliseconds on CPU. Semantics match
-vLLM-style iteration-level batching:
+Drives the *same* ``ServingCore`` step loop (and the same
+``repro.core.scheduler.Scheduler``) the real engine uses, against a calibrated
+iteration-time model, so 2000-request bursts and arrival-rate sweeps (paper
+§IV-D) run in milliseconds on CPU. Semantics match vLLM-style iteration-level
+batching:
 
 * each iteration, every running request decodes exactly one token;
 * newly admitted requests first pay a prefill cost proportional to their
@@ -11,6 +12,11 @@ vLLM-style iteration-level batching:
   like vLLM's mixed prefill/decode steps);
 * iteration time = base + per-token-in-batch cost (+ prefill term), which is
   the standard two-parameter decode-latency model for batched LLM serving.
+
+Because admission goes through the core's KV gate, a simulated run under a
+constrained ``kv_blocks`` budget defers admissions exactly like the real
+engine does — by default the budget is unbounded, preserving the paper's
+memory-unconstrained sweep setup.
 
 Default constants approximate a 7B-class model on an A100 (the paper's
 testbed scale): 25 ms base, 0.15 ms per running request per step, 0.5 ms per
@@ -20,10 +26,12 @@ policy gaps the paper reports are driven by queueing, not by the constants.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.core import ServingCore, VirtualClock
+from repro.serving.kv_cache import BlockAllocator
 from repro.serving.metrics import LatencyReport, report
 
 
@@ -38,48 +46,64 @@ class CostModel:
                 + self.prefill_per_token_s * prefill_tokens)
 
 
-def simulate(requests: Sequence[Request], scheduler: Scheduler, *,
-             cost: CostModel = CostModel(), max_time: float = 1e7,
-             ) -> List[Request]:
-    """Run to completion; returns the finished requests (with timestamps)."""
-    pending = sorted(requests, key=lambda r: r.arrival_time)
-    finished: List[Request] = []
-    now = 0.0
-    i = 0
-    n = len(pending)
-    while (i < n or scheduler.has_work) and now < max_time:
-        # deliver arrivals
-        arrived = []
-        while i < n and pending[i].arrival_time <= now:
-            arrived.append(pending[i])
-            i += 1
-        if arrived:
-            scheduler.add_requests(arrived)
-        if not scheduler.running and not scheduler.waiting:
-            if i < n:                      # idle: jump to next arrival
-                now = pending[i].arrival_time
-                continue
-            break
-        admitted = scheduler.schedule(now)
+class SimBackend:
+    """Cost-model execution: prefill records the admitted tokens, decode
+    charges one batched iteration and advances every running request."""
+
+    def __init__(self, cost: CostModel = CostModel()) -> None:
+        self.cost = cost
+        self._prefill_tokens = 0
+        self.core: Optional[ServingCore] = None
+
+    def attach(self, core: ServingCore) -> None:
+        self.core = core
+
+    def kv_demand(self, req: Request) -> int:
+        # forced-length protocol: residency is prompt + full completion
+        return req.prompt_len + req.true_length
+
+    def prefill(self, admitted: Sequence[Request], now: float) -> float:
         # recompute preemption: a re-admitted request re-prefills its prompt
         # plus everything it had already generated (vLLM recompute semantics)
-        prefill_tokens = sum(
+        self._prefill_tokens += sum(
             r.prompt_len + (r.tokens_done if r.preempt_count else 0)
             for r in admitted)
-        dt = cost.iteration_time(len(scheduler.running), prefill_tokens)
-        now += dt
-        for r in scheduler.running:
+        return now
+
+    def decode(self, now: float) -> float:
+        running = self.core.scheduler.running
+        now += self.cost.iteration_time(len(running), self._prefill_tokens)
+        self._prefill_tokens = 0
+        for r in running:
             r.tokens_done += 1
             if r.first_token_time is None:
                 r.first_token_time = now
-        finished.extend(scheduler.retire_finished(now))
-    finished.extend(scheduler.retire_finished(now))
-    return finished
+        return now
+
+    def release(self, req: Request) -> None:
+        pass                          # no slot residency to free
+
+
+def simulate(requests: Sequence[Request], scheduler: Scheduler, *,
+             cost: CostModel = CostModel(), max_time: float = 1e7,
+             kv_blocks: Optional[int] = None, block_size: int = 16,
+             ) -> List[Request]:
+    """Run to completion; returns the finished requests (with timestamps).
+
+    ``kv_blocks`` bounds the KV cache (in ``block_size``-token blocks);
+    ``None`` keeps the historical memory-unbounded behaviour."""
+    allocator = (BlockAllocator(kv_blocks, block_size) if kv_blocks
+                 else BlockAllocator.unbounded(block_size))
+    core = ServingCore(scheduler, SimBackend(cost), allocator=allocator,
+                       clock=VirtualClock())
+    core.submit(requests)
+    return core.run(max_time=max_time)
 
 
 def run_policy(requests: Sequence[Request], policy, *, max_batch: int = 16,
                continuous: bool = True, cost: CostModel = CostModel(),
-               starvation_threshold: float = 120.0) -> LatencyReport:
+               starvation_threshold: float = 120.0,
+               kv_blocks: Optional[int] = None) -> LatencyReport:
     """Convenience: fresh scheduler + simulate + report."""
     # deep-ish copy so one policy run doesn't pollute another
     reqs = [Request(r.req_id, r.prompt, r.arrival_time, r.prompt_len,
@@ -87,6 +111,6 @@ def run_policy(requests: Sequence[Request], policy, *, max_batch: int = 16,
     sched = Scheduler(policy=policy, max_batch=max_batch,
                       continuous=continuous,
                       starvation_threshold=starvation_threshold)
-    finished = simulate(reqs, sched, cost=cost)
+    finished = simulate(reqs, sched, cost=cost, kv_blocks=kv_blocks)
     assert len(finished) == len(requests), (len(finished), len(requests))
     return report(policy.name, finished)

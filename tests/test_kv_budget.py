@@ -1,0 +1,129 @@
+"""BlockAllocator coverage + KV-budget back-pressure through the ServingCore:
+both execution modes now get memory-aware admission from the same gate."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.scheduler.policies import fcfs
+from repro.core.scheduler.request import Request
+from repro.core.scheduler.scheduler import Scheduler
+from repro.serving import BlockAllocator
+from repro.serving.simulator import CostModel, simulate
+
+
+# ----------------------------------------------------------- allocator units
+def test_extend_growth_and_denial():
+    a = BlockAllocator(total_blocks=8, block_size=16)
+    a.allocate(1, 32)                      # 2 blocks
+    assert a.extend(1, 64)                 # grow to 4
+    assert a.reserved(1) == 4
+    assert not a.extend(1, 16 * 9)         # 9 blocks > capacity
+    assert a.reserved(1) == 4              # denied extend leaves state intact
+    assert a.extend(1, 40)                 # shrink-capable re-reservation
+    assert a.reserved(1) == 3
+
+
+def test_exhaustion_raises_memory_error():
+    a = BlockAllocator(total_blocks=4, block_size=16)
+    a.allocate(1, 33)                      # 3 blocks
+    with pytest.raises(MemoryError):
+        a.allocate(2, 33)
+    assert a.can_allocate(16) and not a.can_allocate(17)
+
+
+def test_free_list_reuse_after_free():
+    a = BlockAllocator(total_blocks=4, block_size=16)
+    a.allocate(1, 64)
+    assert a.free_blocks == 0 and a.used_blocks == 4
+    a.free(1)
+    assert a.free_blocks == 4
+    a.allocate(2, 64)                      # freed capacity is reusable
+    assert a.reserved(2) == 4
+    a.free(99)                             # unknown id is a no-op
+
+
+def test_unbounded_allocator_never_back_pressures():
+    a = BlockAllocator.unbounded()
+    for i in range(100):
+        assert a.can_allocate(1 << 20)
+        a.allocate(i, 1 << 20)
+
+
+# --------------------------------------------- simulator under a KV budget
+def _reqs(n, plen=8, tlen=16):
+    return [Request(i, f"p{i}", 0.0, plen, tlen) for i in range(n)]
+
+
+def _max_concurrency(finished):
+    events = sorted([(r.start_time, 1) for r in finished]
+                    + [(r.finish_time, -1) for r in finished],
+                    key=lambda e: (e[0], e[1]))
+    cur = peak = 0
+    for _, d in events:
+        cur += d
+        peak = max(peak, cur)
+    return peak
+
+
+def test_simulator_defers_admission_under_tight_kv_budget():
+    """Each request reserves ceil((8+16)/16)=2 blocks; a 4-block budget caps
+    concurrency at 2 even though the batch has room for all 6."""
+    cost = CostModel(iter_base_s=0.01, per_seq_s=0.0, prefill_per_token_s=0.0)
+    free = simulate(_reqs(6), Scheduler(policy=fcfs(), max_batch=6), cost=cost)
+    assert all(r.start_time == 0.0 for r in free)     # unbounded: no deferral
+
+    fin = simulate(_reqs(6), Scheduler(policy=fcfs(), max_batch=6),
+                   cost=cost, kv_blocks=4)
+    assert len(fin) == 6                              # deferred, not dropped
+    assert _max_concurrency(fin) <= 2
+    assert any(r.start_time > 0.0 for r in fin)       # admission was deferred
+
+
+def test_simulator_raises_on_never_fitting_request():
+    with pytest.raises(MemoryError):
+        simulate([Request(0, "p", 0.0, 100, 100)],
+                 Scheduler(policy=fcfs(), max_batch=1), kv_blocks=2)
+
+
+# ------------------------------------------------- real path: bucketed prefill
+def test_bucketed_prefill_one_dispatch_per_bucket():
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tfm
+    from repro.serving.engine import Engine
+
+    cfg = get_smoke_config("llama3_2_3b").replace(dtype="float32",
+                                                  vocab_size=2048)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    sched = Scheduler(policy=fcfs(), max_batch=8)
+    eng = Engine(cfg, params, sched, cache_len=64, prompt_len=16)
+    short = "a b c"                                   # 4 tokens → bucket 8
+    long = " ".join(f"w{i}" for i in range(14))       # 15 tokens → bucket 16
+    reqs = [Request(i, short if i % 2 else long, 0.0, 8, 3) for i in range(6)]
+    eng.submit(reqs)
+    fin = eng.run()
+    assert len(fin) == 6
+    assert eng.backend.prefill_requests == 6
+    # the whole burst admits in one cycle → one dispatch per distinct bucket
+    assert eng.backend.prefill_dispatches == 2
+    assert eng.allocator.free_blocks == eng.allocator.total_blocks
+    # the scheduler's queues were never poked from outside: every request
+    # went W → R → retired through the API
+    assert not sched.waiting and not sched.running
+
+
+def test_sequential_prefill_dispatches_per_request():
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tfm
+    from repro.serving.engine import Engine
+
+    cfg = get_smoke_config("llama3_2_3b").replace(dtype="float32",
+                                                  vocab_size=2048)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    sched = Scheduler(policy=fcfs(), max_batch=8)
+    eng = Engine(cfg, params, sched, cache_len=64, prompt_len=16,
+                 bucketed=False)
+    reqs = [Request(i, f"prompt number {i}", 0.0, 4, 2) for i in range(5)]
+    eng.submit(reqs)
+    fin = eng.run()
+    assert len(fin) == 5
+    assert eng.backend.prefill_dispatches == 5        # the old per-request path

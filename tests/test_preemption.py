@@ -48,6 +48,45 @@ def test_preemption_off_means_no_evictions():
     assert all(r.preempt_count == 0 for r in fin)
 
 
+def test_preemption_releases_kv_reservation():
+    """Budgeted run: a victim's blocks must come back on eviction, or the
+    long job could never be re-admitted (the run would raise MemoryError)."""
+    cost = CostModel(iter_base_s=0.01, per_seq_s=0.0, prefill_per_token_s=0.0)
+    # long job: (8+1000)/16 → 63 blocks; shorts: (8+5)/16 → 1 block each
+    reqs = [_req(0, 1000, 0.0)] + [_req(i, 5, 1.0) for i in range(1, 4)]
+    sched = Scheduler(policy=oracle_sjf(), max_batch=2, preemption=True)
+    fin = {r.req_id: r for r in simulate(reqs, sched, cost=cost, kv_blocks=64)}
+    assert set(fin) == {0, 1, 2, 3}
+    assert fin[0].preempt_count >= 1
+    assert all(r.tokens_done == r.true_length for r in fin.values())
+
+
+def test_real_backend_preserves_progress_on_readmission():
+    """Re-admitting a preempted request on the real path must keep its decode
+    progress and TTFT (recompute semantics, matching SimBackend)."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.core.scheduler.policies import fcfs
+    from repro.models import transformer as tfm
+    from repro.serving.engine import Engine
+
+    cfg = get_smoke_config("llama3_2_3b").replace(dtype="float32",
+                                                  vocab_size=2048)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=2),
+                 cache_len=64, prompt_len=16)
+    victim = _req(0, 100)
+    victim.tokens_done, victim.preempt_count = 37, 1
+    victim.first_token_time = 0.5
+    eng.backend.prefill([victim], now=1.0)
+    assert victim.tokens_done == 37
+    assert victim.first_token_time == 0.5
+    fresh = _req(1, 10)
+    eng.backend.prefill([fresh], now=2.0)
+    assert fresh.tokens_done == 1
+    assert fresh.first_token_time is not None
+
+
 def test_recompute_cost_charged_on_readmission():
     """The simulator charges prompt + generated tokens on re-admission."""
     cost = CostModel(iter_base_s=0.0, per_seq_s=0.0, prefill_per_token_s=1.0)

@@ -1,7 +1,7 @@
 """Scheduler invariants: unit + hypothesis property tests (deliverable (c))."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.scheduler.policies import fcfs, make_policy, oracle_sjf
 from repro.core.scheduler.request import Request
@@ -62,6 +62,27 @@ def test_predictor_policy_annotates_scores():
     s.add_requests(reqs)
     admitted = s.schedule(0.0)
     assert admitted[0].req_id == 1            # lower score first
+
+
+def test_admit_hook_gates_admission_in_rank_order():
+    s = Scheduler(policy=fcfs(), max_batch=4)
+    s.admit_hook = lambda r: r.req_id != 1          # "no memory" for req 1
+    s.add_requests(_reqs([5, 5, 5]))
+    admitted = s.schedule(0.0)
+    assert [r.req_id for r in admitted] == [0, 2]
+    assert [r.req_id for r in s.waiting] == [1]     # stays in W, not dropped
+    assert all(r.state.value == "running" for r in admitted)
+
+
+def test_defer_returns_requests_to_head_of_waiting():
+    s = Scheduler(policy=fcfs(), max_batch=3)
+    s.add_requests(_reqs([5, 5, 5, 5], arrivals=[0.0, 1.0, 2.0, 3.0]))
+    admitted = s.schedule(4.0)
+    assert len(admitted) == 3
+    s.defer(admitted[1:])
+    assert [r.req_id for r in s.running] == [0]
+    assert [r.req_id for r in s.waiting] == [1, 2, 3]
+    assert s.waiting[0].state.value == "waiting"
 
 
 # ---------------------------------------------------------------- properties
