@@ -26,8 +26,28 @@ class Request:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     tokens_done: int = 0
+    # Chunked prefill: prompt tokens already resident in the KV cache, in the
+    # *backend's* prompt-token space (``ExecutionBackend.prefill_total``; the
+    # real engine pads prompts to its token bucket, the simulator uses
+    # ``prompt_len``). A request only joins the decode batch once
+    # ``prefilled_tokens >= prefill_total``. Reset to 0 on preemption
+    # eviction — recompute semantics re-prefill from offset 0.
+    prefilled_tokens: int = 0
+    # Snapshot of ``prefill_total`` taken by the core at admission, so a
+    # total that folds in recompute work (the simulator charges prompt +
+    # already-generated tokens after preemption) stays frozen while the
+    # request is resident instead of drifting as ``tokens_done`` grows.
+    prefill_target: Optional[int] = None
     boosted: bool = False                     # starvation-prevention flag
     preempt_count: int = 0                    # recompute-preemption evictions
+    # Per-token completion timestamps (only filled when the serving core is
+    # created with ``record_token_times=True``): one entry per generated
+    # token, so inter-token-latency percentiles can be computed from actual
+    # gaps instead of the (finish-first)/n mean.
+    token_times: list = field(default_factory=list)
+    # Generated token ids (real engine only, gated by ``record_tokens``):
+    # used to check chunked and unchunked serving emit identical outputs.
+    generated_tokens: list = field(default_factory=list)
 
     @property
     def finished(self) -> bool:

@@ -122,6 +122,8 @@ class Scheduler:
         self.running = [r for r in self.running if r not in reqs]
         for r in reqs:
             r.state = RequestState.WAITING
+            r.prefilled_tokens = 0       # deferred residency is fully released
+            r.prefill_target = None
         self.waiting[:0] = reqs
 
     def _preempt(self) -> None:
@@ -144,6 +146,11 @@ class Scheduler:
                 self.running.remove(victim)
                 victim.state = RequestState.WAITING
                 victim.preempt_count = getattr(victim, "preempt_count", 0) + 1
+                # a half-prefilled victim loses its partial KV residency too:
+                # re-admission re-prefills from offset 0 (recompute semantics)
+                # and re-snapshots its prefill target
+                victim.prefilled_tokens = 0
+                victim.prefill_target = None
                 if self.evict_hook is not None:
                     self.evict_hook(victim)
                 self.waiting.append(victim)

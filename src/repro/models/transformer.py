@@ -397,6 +397,78 @@ def forward_seq(params, cfg: ModelConfig, tokens, *,
     return logits, cache, {"load_balance_loss": lb, "router_z_loss": zl}
 
 
+def forward_chunk(params, cfg: ModelConfig, tokens: jax.Array, cache: PyTree,
+                  *, attn_impl="chunked", kv_chunk=1024,
+                  ) -> Tuple[jax.Array, PyTree]:
+    """Continue a partial prefill: extend ``cache`` with ``tokens`` (B, C).
+
+    The chunk occupies absolute positions ``cache["pos"] .. pos+C-1``. Per
+    layer the chunk's K/V are written into the cache *first* (one
+    ``dynamic_update_slice`` at the traced offset), then the chunk's queries
+    attend over the whole cache lane with the causal mask keyed on absolute
+    positions — rows at positions ≤ the query are exactly the real prefix
+    (earlier chunks plus this one), rows beyond are masked out. This makes
+    chunked prefill mathematically identical to a single full-prompt
+    ``forward_seq`` for attention-family models.
+
+    Supported families: DENSE / MOE / VLM (pure-attention token mixing).
+    Recurrent families (SSM / HYBRID) and encoder-decoder models carry
+    cross-chunk state that ``forward_seq`` does not externalize, so chunked
+    continuation raises for them — the serving engine rejects the
+    combination up front (``RealBackend.attach``).
+
+    Requires an append-buffer cache (no ring wraparound): the caller must
+    guarantee ``pos + C <= cache_len``; the serving engine enforces
+    ``prompt_len <= cache_len`` when chunking is enabled.
+
+    Returns (logits (B, C, V), new_cache). logits[:, -1] is the next-token
+    distribution after the chunk — only meaningful to sample from on the
+    final chunk of a prompt.
+    """
+    if cfg.family not in (DENSE, MOE, VLM) or cfg.is_encdec:
+        raise NotImplementedError(
+            f"forward_chunk supports attention-family models; {cfg.family}"
+            f"{' enc-dec' if cfg.is_encdec else ''} carries recurrent "
+            f"cross-chunk state")
+    pos0 = cache["pos"]
+    x = _embed(params, cfg, tokens, start_pos=pos0)
+    b, c, _ = x.shape
+    positions = positions_for(cfg, b, pos0, c)
+    mrope_pos = (jnp.broadcast_to(positions[None], (3, b, c))
+                 if cfg.pos_emb == "mrope" else None)
+    layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+
+    def body(x, xs):
+        lp, cache_l = xs
+        new_cache = dict(cache_l)
+        xn = apply_norm(lp["ln1"], x, cfg.norm)
+        q, k, v = _qkv(lp["attn"], xn, cfg)
+        q, k = _rope_qk(q, k, cfg, positions, mrope_pos)
+        # append-buffer write at the chunk offset (pos0 is traced data, so
+        # one compiled program serves every offset)
+        ck = jax.lax.dynamic_update_slice(cache_l["k"], k, (0, pos0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache_l["v"], v, (0, pos0, 0, 0))
+        w = ck.shape[1]
+        pos_kv = jnp.broadcast_to(jnp.arange(w, dtype=jnp.int32)[None], (b, w))
+        out = attention(q, ck, cv, positions, pos_kv, causal=True,
+                        window=cfg.sliding_window, impl=attn_impl,
+                        kv_chunk=kv_chunk)
+        x = x + (out.reshape(b, c, -1) @ lp["attn"]["wo"]
+                 + (lp["attn"]["bo"] if "bo" in lp["attn"] else 0))
+        xn2 = apply_norm(lp["ln2"], x, cfg.norm)
+        ffn_out, _ = _ffn(lp, xn2, cfg)
+        x = x + ffn_out
+        new_cache.update(k=ck, v=cv)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], layer_caches))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _unembed(params, cfg, x)
+    new_cache = dict(new_caches)
+    new_cache["pos"] = pos0 + c
+    return logits, new_cache
+
+
 def decode_step(params, cfg: ModelConfig, cache: PyTree, token: jax.Array,
                 ) -> Tuple[jax.Array, PyTree]:
     """One decode step. token: (B,1) int32. Returns (logits (B,V), cache)."""

@@ -5,7 +5,8 @@ the engine enforced the KV budget by reaching into the scheduler's queues,
 while the simulator ignored the ``BlockAllocator`` entirely. ``ServingCore``
 owns the one canonical cycle —
 
-    arrival delivery → KV-aware admission → prefill → decode → retirement
+    arrival delivery → KV-aware admission → chunked prefill → decode
+                     → retirement
 
 — parameterized by an :class:`ExecutionBackend` (the jitted JAX engine or the
 calibrated cost model) and a :class:`Clock` (wall time or discrete-event
@@ -15,18 +16,35 @@ time, so a request that doesn't fit simply stays in W — no queue surgery, in
 either mode. Preemption evictions release their reservation through the
 scheduler's ``evict_hook`` the same way.
 
-New serving behavior (chunked prefill, prefix caching, multi-replica
-dispatch) lands here once and both modes inherit it.
+**Mixed prefill/decode steps (Sarathi-style chunked prefill).** PARS removes
+head-of-line blocking at the *queue* level, but an unchunked loop still has
+HOL blocking at the *step* level: a burst of long prompts monopolizes the
+prefill phase and stalls every running decode until the whole burst is
+resident. With ``prefill_chunk_tokens`` set, each :meth:`ServingCore.step`
+spends at most that many prompt tokens on prefill — tracked per request via
+``Request.prefilled_tokens`` — and then runs one decode iteration for every
+request whose prompt is fully resident. Long prompts therefore stream into
+the cache across many steps while decodes keep producing tokens in between;
+TTFT of the long prompt pays for inter-token latency of everyone else.
+``prefill_chunk_tokens=None`` (default) preserves the historical
+prefill-to-completion behaviour exactly.
+
+New serving behavior (prefix caching, multi-replica dispatch) lands here once
+and both modes inherit it.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Deque, List, Optional, Protocol, Sequence
+from typing import Deque, List, Optional, Protocol, Sequence, Tuple
 
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
 from repro.serving.kv_cache import BlockAllocator
+
+# One planned unit of prefill work: (request, start, end) in the backend's
+# prompt-token space — prefill prompt tokens [start, end) of this request.
+PrefillChunk = Tuple[Request, int, int]
 
 
 class Clock(Protocol):
@@ -71,12 +89,31 @@ class ExecutionBackend(Protocol):
         """Tokens of KV cache this request will occupy while resident."""
         ...
 
-    def prefill(self, admitted: Sequence[Request], now: float) -> float:
-        """Process newly admitted requests; returns the updated time."""
+    def prefill_total(self, req: Request) -> int:
+        """Prompt tokens this backend must prefill before ``req`` can decode.
+
+        The core plans chunks against this total and a request joins the
+        decode batch once ``req.prefilled_tokens`` reaches it. Backends may
+        exceed ``req.prompt_len`` (the real engine pads prompts to its token
+        bucket; the simulator charges recompute tokens after preemption).
+        """
+        ...
+
+    def prefill(self, chunks: Sequence[PrefillChunk], now: float) -> float:
+        """Process planned prefill chunks; returns the updated time.
+
+        Each ``(req, start, end)`` asks for prompt tokens [start, end) to be
+        made KV-resident. ``start == 0`` is a request's first chunk (the
+        backend claims residency, e.g. a cache slot); ``end ==
+        prefill_total(req)`` completes its prompt (the backend emits the
+        first output token). The core updates ``req.prefilled_tokens`` after
+        this call returns.
+        """
         ...
 
     def decode(self, now: float) -> float:
-        """Advance every running request one token; returns the updated time."""
+        """Advance every *fully prefilled* running request one token;
+        returns the updated time."""
         ...
 
     def release(self, req: Request) -> None:
@@ -85,15 +122,30 @@ class ExecutionBackend(Protocol):
 
 
 class ServingCore:
-    """The single KV-aware step loop behind the engine and the simulator."""
+    """The single KV-aware step loop behind the engine and the simulator.
+
+    ``prefill_chunk_tokens`` — per-step prompt-token budget for mixed
+    prefill/decode steps (``None`` = prefill each admitted request to
+    completion in its admission step, the pre-chunking behaviour).
+
+    ``record_token_times`` — have backends append a wall/virtual timestamp to
+    ``Request.token_times`` per generated token, enabling gap-based
+    inter-token-latency percentiles in :mod:`repro.serving.metrics`.
+    """
 
     def __init__(self, scheduler: Scheduler, backend: ExecutionBackend, *,
                  allocator: Optional[BlockAllocator] = None,
-                 clock: Optional[Clock] = None) -> None:
+                 clock: Optional[Clock] = None,
+                 prefill_chunk_tokens: Optional[int] = None,
+                 record_token_times: bool = False) -> None:
+        if prefill_chunk_tokens is not None and prefill_chunk_tokens <= 0:
+            raise ValueError("prefill_chunk_tokens must be positive or None")
         self.scheduler = scheduler
         self.backend = backend
         self.allocator = allocator or BlockAllocator.unbounded()
         self.clock: Clock = clock or WallClock()
+        self.prefill_chunk_tokens = prefill_chunk_tokens
+        self.record_token_times = record_token_times
         self.finished: List[Request] = []
         self._pending: Deque[Request] = deque()
         scheduler.admit_hook = self._reserve
@@ -105,10 +157,28 @@ class ServingCore:
         self._pending = deque(sorted([*self._pending, *requests],
                                      key=lambda r: r.arrival_time))
 
+    def decode_ready(self, req: Request) -> bool:
+        """True once a request's whole prompt is KV-resident (it may join
+        the decode batch). Backends use this to filter ``running``."""
+        return req.prefilled_tokens >= self._target(req)
+
+    def _target(self, req: Request) -> int:
+        """The request's frozen prefill total: snapshotted at admission so a
+        backend total that folds in recompute work (the simulator charges
+        prompt + generated tokens after preemption) doesn't drift while the
+        request decodes."""
+        if req.prefill_target is None:
+            req.prefill_target = self.backend.prefill_total(req)
+        return req.prefill_target
+
     # ---------------------------------------------------------------- hooks
     def _reserve(self, req: Request) -> bool:
         """Scheduler admission gate: reserve KV blocks or keep the request
-        in W (memory back-pressure, identical in both execution modes)."""
+        in W (memory back-pressure, identical in both execution modes).
+
+        The *full* demand is reserved up front even under chunked prefill —
+        a half-prefilled request must never deadlock waiting for blocks its
+        own decode phase needs."""
         need = self.backend.kv_demand(req)
         if not self.allocator.can_allocate(need):
             return False
@@ -116,7 +186,9 @@ class ServingCore:
         return True
 
     def _evict(self, req: Request) -> None:
-        """Preemption eviction: blocks and backend residency come back."""
+        """Preemption eviction: blocks and backend residency come back.
+        (The scheduler resets ``prefilled_tokens`` — a half-prefilled victim
+        re-prefills from offset 0 on re-admission.)"""
         self.allocator.free(req.req_id)
         self.backend.release(req)
 
@@ -127,11 +199,52 @@ class ServingCore:
             self.finished.append(r)
 
     # ----------------------------------------------------------------- loop
+    def _plan_chunks(self) -> List[PrefillChunk]:
+        """Plan this step's prefill work under the chunk-token budget.
+
+        Walks ``running`` in admission order (oldest prefill first, so
+        earlier arrivals reach their first token sooner). A request whose
+        whole remainder fits the remaining budget takes it and leaves the
+        rest for later requests (Sarathi-style chunk packing). A *partial*
+        take — splitting a prompt mid-stream — is only allowed as the
+        step's first planned chunk, where it gets the full budget: that
+        keeps every chunk length in {whole padded prompts, remainders of
+        them, the budget itself}, so the real engine's jitted dispatch
+        shapes stay inside the warmed (bucket ∪ chunk) grid instead of
+        fragmenting into arbitrary leftover lengths. A request skipped for
+        that reason is head-of-line next step, so it cannot starve.
+
+        With no budget configured every prefilling request gets its full
+        remainder in one chunk, which is exactly the historical
+        prefill-to-completion step.
+        """
+        budget = self.prefill_chunk_tokens or float("inf")
+        chunks: List[PrefillChunk] = []
+        for r in self.scheduler.running:
+            if budget <= 0:
+                break
+            remaining = self._target(r) - r.prefilled_tokens
+            if remaining <= 0:
+                continue
+            if remaining <= budget:
+                take = remaining
+            elif not chunks:
+                take = int(budget)
+            else:
+                continue        # no mid-pack partials (bounded shapes)
+            chunks.append((r, r.prefilled_tokens, r.prefilled_tokens + take))
+            budget -= take
+        return chunks
+
     def step(self, now: float) -> float:
-        """One serving cycle: admit → prefill → decode → retire."""
-        admitted = self.scheduler.schedule(now)
-        if admitted:
-            now = self.backend.prefill(admitted, now)
+        """One mixed serving cycle: admit → prefill ≤ chunk tokens → one
+        decode token for every fully prefilled running request → retire."""
+        self.scheduler.schedule(now)
+        chunks = self._plan_chunks()
+        if chunks:
+            now = self.backend.prefill(chunks, now)
+            for req, _start, end in chunks:
+                req.prefilled_tokens = end
             self._retire(now)            # true_length == 1 finishes at prefill
         if self.scheduler.running:
             now = self.backend.decode(now)
@@ -167,12 +280,16 @@ class ServingCore:
                 if self._pending:
                     self.clock.wait_until(self._pending[0].arrival_time)
                     continue
-                need = min(self.backend.kv_demand(r)
-                           for r in self.scheduler.waiting)
+                smallest = min(self.scheduler.waiting,
+                               key=self.backend.kv_demand)
+                tokens = self.backend.kv_demand(smallest)
                 raise MemoryError(
-                    f"KV budget can never admit remaining requests: min "
-                    f"demand {self.allocator.blocks_for(need)} blocks, "
-                    f"capacity {self.allocator.total_blocks}")
+                    f"KV budget can never admit remaining requests: request "
+                    f"{smallest.req_id} has the smallest demand, "
+                    f"{tokens} tokens = {self.allocator.blocks_for(tokens)} "
+                    f"blocks of {self.allocator.block_size}, but the cache "
+                    f"only has {self.allocator.total_blocks} blocks "
+                    f"({self.allocator.free_blocks} free)")
             self.clock.wait_until(new_now)
             if log_every and new_now - last_log > log_every:
                 last_log = new_now

@@ -15,6 +15,20 @@ into a power-of-two-sized compact batch — idle lanes are never computed —
 runs one jitted step, and scatters back. Padding lanes replay an active lane
 with the same per-slot RNG key, so duplicate scatter writes are idempotent.
 
+**Chunked prefill** (``prefill_chunk_tokens`` on :class:`Engine` /
+:func:`serve`): the core plans mixed steps and this backend executes each
+planned ``(req, start, end)`` chunk. A request's *first* chunk reuses the
+bucketed ``_prefill_bucket`` + ``_place`` pair (a chunk starting at offset 0
+is just a short prefill); *continuation* chunks run ``_extend_chunk``, which
+writes the chunk's K/V into the request's cache lane at its current offset
+and attends the chunk's queries over the already-resident prefix — exact
+continuation, so chunked and unchunked serving produce identical greedy
+outputs. A slot only joins the decode batch once its prompt is fully
+resident (``core.decode_ready``). Chunked prefill requires an
+attention-family model (DENSE/MoE/VLM) and an append-buffer cache
+(``prompt_len <= cache_len``, no sliding window); recurrent families carry
+cross-chunk state that ``forward_seq`` does not externalize.
+
 Prompt handling: prompts are hash-tokenized into their bucket. Completion
 length follows the request's ground-truth ``true_length`` (the forced-length
 protocol, DESIGN.md §3) — the engine generates real tokens, but *when* a
@@ -30,12 +44,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import DENSE, MOE, VLM, ModelConfig
 from repro.core.predictor.tokenizer import HashTokenizer
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
 from repro.models import transformer as tfm
-from repro.serving.core import ServingCore, WallClock
+from repro.serving.core import PrefillChunk, ServingCore, WallClock
 from repro.serving.kv_cache import BlockAllocator
 from repro.serving.metrics import LatencyReport, report
 from repro.serving.sampler import SamplerConfig, sample
@@ -52,7 +66,8 @@ class RealBackend:
                  cache_len: int = 512, prompt_len: int = 32,
                  tokenizer: Optional[HashTokenizer] = None,
                  sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
-                 bucketed: bool = True, min_bucket: int = 8):
+                 bucketed: bool = True, min_bucket: int = 8,
+                 record_tokens: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -60,6 +75,7 @@ class RealBackend:
         self.prompt_len = prompt_len
         self.bucketed = bucketed
         self.min_bucket = min(min_bucket, prompt_len)
+        self.record_tokens = record_tokens
         self.tok = tokenizer or HashTokenizer(
             vocab_size=min(cfg.vocab_size, 2048), max_len=prompt_len)
         self._key = jax.random.PRNGKey(seed)
@@ -68,25 +84,42 @@ class RealBackend:
         # --- slot state ------------------------------------------------------
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self._slot_of: Dict[int, int] = {}
+        self._ids: Dict[int, List[int]] = {}    # req_id -> encoded prompt ids
         self.slot_tokens = jnp.zeros((max_batch, 1), jnp.int32)
         row_cache = jax.eval_shape(lambda: tfm.init_cache(cfg, 1, cache_len))
         self.cache = jax.tree.map(
             lambda l: jnp.zeros((max_batch,) + l.shape, l.dtype), row_cache)
 
         # --- instrumentation -------------------------------------------------
-        self.prefill_dispatches = 0   # jitted forward_seq launches
-        self.prefill_requests = 0     # requests admitted through them
-        self.prefill_seconds = 0.0    # wall time spent in admission
+        self.prefill_dispatches = 0   # jitted first-chunk forward_seq launches
+        self.extend_dispatches = 0    # jitted continuation-chunk launches
+        self.prefill_requests = 0     # requests whose prefill completed
+        self.prefill_seconds = 0.0    # wall time spent in admission/prefill
 
         # --- jitted programs -------------------------------------------------
         sampler_cfg = sampler
 
         @jax.jit
         def _prefill_bucket(params, tokens, slot_ids, key):
-            """One bucket: tokens (B, bucket_len) → (next token (B,), cache).
+            """First-chunk prefill for one token bucket.
 
-            Per-slot keys (``fold_in``) make padding lanes that replay lane 0
-            sample the same token, keeping duplicate scatters idempotent."""
+            ``tokens`` is (B, bucket_len) int32 — the admitted prompts of one
+            power-of-two length bucket, zero-padded on the right (token id 0
+            acts as the pad token) and with padding *lanes* replaying lane 0.
+            Runs one full-sequence forward with ``build_cache=True``, so the
+            returned cache pytree holds every layer's K/V for positions
+            [0, bucket_len), already padded out to ``cache_len`` rows by
+            ``prefill_cache`` and carrying ``pos = bucket_len``.
+
+            Also samples each lane's next token from ``logits[:, -1]`` — the
+            request's first output token *if* this bucket covers its whole
+            (padded) prompt; for a partial first chunk the sample is discarded
+            by the caller. Per-slot keys (``fold_in``) make padding lanes that
+            replay lane 0 sample the same token, keeping duplicate scatter
+            writes idempotent.
+
+            Returns ``(next_token (B,), cache)`` where cache leaves are
+            (L, B, cache_len, ...) plus the ``pos`` scalar."""
             logits, cache, _ = tfm.forward_seq(
                 params, cfg, tokens, build_cache=True, cache_len=cache_len,
                 remat="none")
@@ -97,7 +130,18 @@ class RealBackend:
 
         @jax.jit
         def _place(full_cache, bucket_cache, full_tokens, nxt, slot_ids):
-            """Scatter a prefilled bucket's rows into their slots."""
+            """Scatter a prefilled bucket's rows into their cache slots.
+
+            ``full_cache`` leaves are (max_batch, L, 1, cache_len, ...) — one
+            fixed lane per slot; ``bucket_cache`` leaves arrive from
+            ``_prefill_bucket`` as (L, B, cache_len, ...) (scan-stacked, batch
+            second). ``put`` transposes each bucket leaf to slot-major and
+            writes whole lanes at ``slot_ids``; the scalar ``pos`` leaf
+            broadcasts to every written slot, recording how many prompt
+            tokens are resident (the chunk offset that ``_extend_chunk`` and
+            decode continue from). ``nxt`` lands in ``full_tokens`` as each
+            slot's pending decode input. Duplicate ``slot_ids`` (padding
+            lanes) write identical values, so the scatter is idempotent."""
             def put(full, new):
                 if new.ndim == 0:          # cache position: scalar per slot
                     return full.at[slot_ids].set(new)
@@ -108,9 +152,55 @@ class RealBackend:
             return new_cache, full_tokens.at[slot_ids].set(nxt[:, None])
 
         @jax.jit
+        def _extend_chunk(params, full_cache, full_tokens, tokens, slot_ids,
+                          commit, key):
+            """Continuation-chunk prefill at each slot's current offset.
+
+            ``tokens`` is (B, chunk_len) int32 — the *next* chunk_len prompt
+            tokens of B partially prefilled requests (padding lanes replay
+            lane 0). Gathers those slots' cache rows, runs
+            ``tfm.forward_chunk`` per row under ``vmap`` — each row carries
+            its own ``pos`` leaf, so requests at *different* prefill offsets
+            batch together; the chunk's K/V are written into the lane at
+            [pos, pos+chunk_len) and its queries attend over the resident
+            prefix, making the continuation exact — and scatters the
+            extended rows back.
+
+            Samples each lane's next token from the chunk's last position
+            and commits it into ``full_tokens`` only where ``commit`` is set
+            — the lanes whose prompt this chunk completes (mid-prompt
+            samples are meaningless and must not clobber a pending decode
+            token). Duplicate padding lanes carry lane 0's commit flag, so
+            the scatter stays idempotent. Returns
+            ``(new_full_tokens, new_full_cache)``."""
+            sub = jax.tree.map(lambda l: l[slot_ids], full_cache)
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(slot_ids)
+
+            def one(cache_row, toks, k):
+                logits, new_row = tfm.forward_chunk(params, cfg, toks[None],
+                                                    cache_row)
+                return sample(logits[0, -1], k, sampler_cfg), new_row
+
+            nxt, new_sub = jax.vmap(one)(sub, tokens, keys)
+            new_cache = jax.tree.map(
+                lambda full, s: full.at[slot_ids].set(s), full_cache, new_sub)
+            kept = jnp.where(commit[:, None], nxt[:, None],
+                             full_tokens[slot_ids])
+            return full_tokens.at[slot_ids].set(kept), new_cache
+
+        @jax.jit
         def _decode_active(params, cache, tokens, idx, key):
-            """Gather active slots ``idx`` (padded to a power of two with
-            duplicates of idx[0]), decode one token each, scatter back."""
+            """One decode iteration over the *active* slots only.
+
+            ``idx`` (B,) lists the decode-ready slots, padded to a power of
+            two with duplicates of ``idx[0]`` so the compiled-shape set stays
+            bounded. Gathers those slots' cache rows and pending tokens, runs
+            one ``tfm.decode_step`` per row under ``vmap`` (each row advances
+            at its own ``pos``), samples the next token with per-slot folded
+            keys, and scatters rows and tokens back. Because duplicate lanes
+            compute identical values, the duplicate scatter writes are
+            idempotent. Idle and mid-prefill slots are never touched —
+            half-prefilled requests stay out of the decode batch entirely."""
             sub_cache = jax.tree.map(lambda l: l[idx], cache)
             sub_tokens = tokens[idx]
             keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
@@ -127,16 +217,56 @@ class RealBackend:
 
         self._prefill_bucket = _prefill_bucket
         self._place = _place
+        self._extend_chunk = _extend_chunk
         self._decode_active = _decode_active
 
     # -------------------------------------------------------------- protocol
     def attach(self, core: ServingCore) -> None:
         self.core = core
+        if core.prefill_chunk_tokens is not None:
+            if self.cfg.family not in (DENSE, MOE, VLM) or self.cfg.is_encdec:
+                raise ValueError(
+                    f"chunked prefill needs an attention-family model "
+                    f"(got {self.cfg.family}): recurrent families carry "
+                    f"cross-chunk state forward_seq does not externalize")
+            if self.cfg.sliding_window or self.prompt_len > self.cache_len:
+                raise ValueError(
+                    "chunked prefill needs an append-buffer cache covering "
+                    "the whole prompt (prompt_len <= cache_len, no sliding "
+                    "window): continuation chunks write at absolute offsets")
+            if core.prefill_chunk_tokens > self.cache_len:
+                raise ValueError(
+                    f"prefill_chunk_tokens={core.prefill_chunk_tokens} "
+                    f"exceeds cache_len={self.cache_len}: a continuation "
+                    f"chunk must fit the cache lane it extends")
 
     def kv_demand(self, req: Request) -> int:
         return self.prompt_len + min(req.true_length, self.cache_len)
 
+    def prefill_total(self, req: Request) -> int:
+        """Prompt tokens this engine actually prefills for ``req``: its
+        hash-tokenized prompt padded up to the power-of-two bucket (or to
+        ``prompt_len`` when bucketing is off). Chunk planning, the
+        decode-ready check, and the first-output-token position all use this
+        padded length, so chunked runs process the exact token stream the
+        unchunked bucket path does."""
+        return self._bucket_len(len(self._prompt_ids(req)))
+
+    def _prompt_ids(self, req: Request) -> List[int]:
+        """Encode (and cache) a prompt's token ids, truncated to
+        ``prompt_len``. Cached for the request's residency so per-chunk
+        slicing doesn't re-tokenize; dropped on ``release``."""
+        ids = self._ids.get(req.req_id)
+        if ids is None:
+            ids = [t % self.cfg.vocab_size
+                   for t in self.tok.encode(req.prompt)[:self.prompt_len]]
+            self._ids[req.req_id] = ids
+        return ids
+
     def _bucket_len(self, n_tokens: int) -> int:
+        """Power-of-two token bucket for an ``n_tokens``-long prompt, clamped
+        to [min_bucket, prompt_len]. Bounds the set of compiled prefill
+        shapes; unbucketed mode pads everything to ``prompt_len``."""
         if not self.bucketed:
             return self.prompt_len
         return min(self.prompt_len, _next_pow2(max(n_tokens, self.min_bucket)))
@@ -152,7 +282,9 @@ class RealBackend:
 
     def warmup(self) -> float:
         """Pre-compile the (bucket_len × batch-size) shape grid, vLLM-style,
-        so steady-state admission never pays jit. Returns wall seconds."""
+        so steady-state admission never pays jit. When the core is chunking,
+        also compiles the continuation program for every (chunk, batch)
+        shape. Returns wall seconds."""
         t0 = time.perf_counter()
         key = jax.random.PRNGKey(0)
         sizes, b = [], 1
@@ -160,13 +292,25 @@ class RealBackend:
             sizes.append(b)
             b *= 2
         sizes.append(_next_pow2(self.max_batch))
-        for bl in self.bucket_lens():
+        chunk = self.core.prefill_chunk_tokens if self.core else None
+        lens = sorted(set(self.bucket_lens()) | ({chunk} if chunk else set()))
+        for bl in lens:
             for bsz in sizes:
                 tokens = jnp.zeros((bsz, bl), jnp.int32)
                 slots = jnp.zeros((bsz,), jnp.int32)
                 nxt, cache = self._prefill_bucket(self.params, tokens, slots,
                                                   key)
                 self._place(self.cache, cache, self.slot_tokens, nxt, slots)
+                if chunk and bl == chunk:
+                    # with power-of-two buckets and a power-of-two chunk the
+                    # planner only emits continuation chunks of exactly the
+                    # budget length (partial takes are head-of-line-only and
+                    # bucket totals are multiples of the chunk), so this is
+                    # the whole extend grid; odd configurations lazily
+                    # compile their remainder length once
+                    self._extend_chunk(self.params, self.cache,
+                                       self.slot_tokens, tokens, slots,
+                                       jnp.zeros((bsz,), bool), key)
         for bsz in sizes:
             out, _ = self._decode_active(self.params, self.cache,
                                          self.slot_tokens,
@@ -177,31 +321,60 @@ class RealBackend:
     def _now(self, fallback: float) -> float:
         return self.core.clock.now() if self.core is not None else fallback
 
-    def prefill(self, admitted: Sequence[Request], now: float) -> float:
-        if not admitted:
+    def _record(self, req: Request, token, now: float) -> None:
+        if self.record_tokens:
+            req.generated_tokens.append(int(token))
+        if self.core is not None and self.core.record_token_times:
+            req.token_times.append(now)
+
+    def _tokens_snapshot(self) -> Optional[np.ndarray]:
+        """One host copy of ``slot_tokens`` for ``_record``; None when
+        neither recording flag is on (skip the device→host transfer)."""
+        if self.record_tokens or (self.core is not None
+                                  and self.core.record_token_times):
+            return np.asarray(self.slot_tokens)
+        return None
+
+    def prefill(self, chunks: Sequence[PrefillChunk], now: float) -> float:
+        """Execute one step's planned prefill chunks (see ``ServingCore``).
+
+        First chunks (``start == 0``) claim a free slot and run the bucketed
+        ``_prefill_bucket``/``_place`` path, grouped by chunk length — with
+        chunking off every chunk is a whole padded prompt and this *is* the
+        historical one-dispatch-per-bucket admission. Continuation chunks
+        run ``_extend_chunk`` grouped by length; requests at different
+        offsets share a dispatch since the offset is per-lane data. A
+        request whose chunk reaches ``prefill_total`` gets its first output
+        token committed (tokens_done/TTFT bookkeeping preserved across
+        preemption re-admission, matching SimBackend's recompute
+        semantics)."""
+        if not chunks:
             return now
         t0 = time.perf_counter()
-        encoded = [(r, [t % self.cfg.vocab_size
-                        for t in self.tok.encode(r.prompt)[:self.prompt_len]])
-                   for r in admitted]
-        if self.bucketed:
-            groups: Dict[int, list] = {}
-            for req, ids in encoded:
-                groups.setdefault(self._bucket_len(len(ids)), []).append(
-                    (req, ids))
-            batches = list(groups.items())
-        else:                          # sequential: one dispatch per request
-            batches = [(self.prompt_len, [pair]) for pair in encoded]
-        for bucket_len, group in batches:
-            b = _next_pow2(len(group))
-            tokens = np.zeros((b, bucket_len), np.int32)
-            slots = np.zeros((b,), np.int32)
-            for j, (req, ids) in enumerate(group):
-                tokens[j, :len(ids)] = ids
+        first_groups: Dict[int, list] = {}
+        ext_groups: Dict[int, list] = {}
+        for req, start, end in chunks:
+            if start == 0:
                 slot = self.slot_req.index(None)
                 self.slot_req[slot] = req
                 self._slot_of[req.req_id] = slot
-                slots[j] = slot
+                first_groups.setdefault(end, []).append(req)
+            else:
+                ext_groups.setdefault(end - start, []).append((req, start, end))
+
+        if self.bucketed:
+            first_batches = sorted(first_groups.items())
+        else:                          # sequential: one dispatch per request
+            first_batches = [(ln, [r]) for ln, g in sorted(first_groups.items())
+                             for r in g]
+        for bucket_len, group in first_batches:
+            b = _next_pow2(len(group))
+            tokens = np.zeros((b, bucket_len), np.int32)
+            slots = np.zeros((b,), np.int32)
+            for j, req in enumerate(group):
+                ids = self._prompt_ids(req)[:bucket_len]
+                tokens[j, :len(ids)] = ids
+                slots[j] = self._slot_of[req.req_id]
             tokens[len(group):] = tokens[0]     # padding lanes replay lane 0
             slots[len(group):] = slots[0]
             self._key, sub = jax.random.split(self._key)
@@ -211,21 +384,50 @@ class RealBackend:
             self.cache, self.slot_tokens = self._place(
                 self.cache, bucket_cache, self.slot_tokens, nxt, slots_j)
             self.prefill_dispatches += 1
-            self.prefill_requests += len(group)
+
+        for chunk_len, group in sorted(ext_groups.items()):
+            b = _next_pow2(len(group))
+            tokens = np.zeros((b, chunk_len), np.int32)
+            slots = np.zeros((b,), np.int32)
+            commit = np.zeros((b,), bool)
+            for j, (req, start, end) in enumerate(group):
+                ids = self._prompt_ids(req)[start:end]
+                tokens[j, :len(ids)] = ids      # tail past len(ids) = pad 0s
+                slots[j] = self._slot_of[req.req_id]
+                commit[j] = end >= self.prefill_total(req)
+            tokens[len(group):] = tokens[0]
+            slots[len(group):] = slots[0]
+            commit[len(group):] = commit[0]
+            self._key, sub = jax.random.split(self._key)
+            self.slot_tokens, self.cache = self._extend_chunk(
+                self.params, self.cache, self.slot_tokens,
+                jnp.asarray(tokens), jnp.asarray(slots), jnp.asarray(commit),
+                sub)
+            self.extend_dispatches += 1
+
         jax.block_until_ready(self.slot_tokens)
         self.prefill_seconds += time.perf_counter() - t0
         now = self._now(now)
-        for req, _ in encoded:
+        toks = self._tokens_snapshot()
+        for req, _start, end in chunks:
+            if end < self.prefill_total(req):
+                continue                        # still mid-prompt
+            self.prefill_requests += 1
             # recompute semantics on re-admission after preemption: decode
             # progress and TTFT are preserved, matching SimBackend
             if req.tokens_done == 0:
                 req.tokens_done = 1             # prefill emits token 1
+                if toks is not None:
+                    self._record(req, toks[self._slot_of[req.req_id], 0], now)
             if req.first_token_time is None:
                 req.first_token_time = now
         return now
 
     def decode(self, now: float) -> float:
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        ready = (self.core.decode_ready if self.core is not None
+                 else lambda r: True)
+        active = [i for i, r in enumerate(self.slot_req)
+                  if r is not None and ready(r)]
         if not active:
             return now
         idx = np.asarray(
@@ -235,11 +437,16 @@ class RealBackend:
         self.slot_tokens, self.cache = self._decode_active(
             self.params, self.cache, self.slot_tokens, jnp.asarray(idx), sub)
         jax.block_until_ready(self.slot_tokens)
+        now = self._now(now)
+        toks = self._tokens_snapshot()
         for i in active:
             self.slot_req[i].tokens_done += 1
-        return self._now(now)
+            if toks is not None:
+                self._record(self.slot_req[i], toks[i, 0], now)
+        return now
 
     def release(self, req: Request) -> None:
+        self._ids.pop(req.req_id, None)
         slot = self._slot_of.pop(req.req_id, None)
         if slot is not None:
             self.slot_req[slot] = None
@@ -253,17 +460,22 @@ class Engine:
                  tokenizer: Optional[HashTokenizer] = None,
                  allocator: Optional[BlockAllocator] = None,
                  sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
-                 bucketed: bool = True):
+                 bucketed: bool = True,
+                 prefill_chunk_tokens: Optional[int] = None,
+                 record_tokens: bool = False,
+                 record_token_times: bool = False):
         s = scheduler.max_batch
         self.scheduler = scheduler
         self.backend = RealBackend(
             cfg, params, max_batch=s, cache_len=cache_len,
             prompt_len=prompt_len, tokenizer=tokenizer, sampler=sampler,
-            seed=seed, bucketed=bucketed)
+            seed=seed, bucketed=bucketed, record_tokens=record_tokens)
         self.allocator = allocator or BlockAllocator(
             total_blocks=s * (-(-cache_len // 16)), block_size=16)
         self.core = ServingCore(scheduler, self.backend,
-                                allocator=self.allocator)
+                                allocator=self.allocator,
+                                prefill_chunk_tokens=prefill_chunk_tokens,
+                                record_token_times=record_token_times)
 
     # -------------------------------------------------------------------- api
     @property
@@ -293,14 +505,15 @@ def serve(cfg: ModelConfig, params, requests: Sequence[Request], policy, *,
           max_batch: int = 8, cache_len: int = 256, prompt_len: int = 32,
           starvation_threshold: float = 120.0, time_scale: float = 1.0,
           log_every: float = 0.0, bucketed: bool = True,
-          kv_blocks: Optional[int] = None) -> LatencyReport:
+          kv_blocks: Optional[int] = None,
+          prefill_chunk_tokens: Optional[int] = None) -> LatencyReport:
     """Convenience wrapper: fresh engine + scheduler, serve, report."""
     sched = Scheduler(policy=policy, max_batch=max_batch,
                       starvation_threshold=starvation_threshold)
     allocator = BlockAllocator(kv_blocks, 16) if kv_blocks else None
     eng = Engine(cfg, params, sched, cache_len=cache_len,
                  prompt_len=prompt_len, allocator=allocator,
-                 bucketed=bucketed)
+                 bucketed=bucketed, prefill_chunk_tokens=prefill_chunk_tokens)
     eng.submit(requests)
     finished = eng.run(time_scale=time_scale, log_every=log_every)
     assert len(finished) == len(requests), (len(finished), len(requests))

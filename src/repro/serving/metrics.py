@@ -1,5 +1,17 @@
 """Serving metrics: the paper's average & p90 *per-token* latency (§IV) plus
-throughput/TTFT diagnostics."""
+the two latency axes chunked prefill trades between:
+
+* **TTFT** (arrival → first token): chunking a long prompt across steps
+  delays *its* first token;
+* **inter-token latency** (gap between consecutive output tokens of a
+  request already decoding): chunking exists to protect exactly this — an
+  unchunked long-prompt burst shows up as a p99 ITL spike on every
+  co-resident request.
+
+ITL percentiles come from actual per-token gaps when the run recorded
+``Request.token_times`` (``record_token_times=True`` on the core), and fall
+back to each request's mean gap (finish − first_token)/(n − 1) otherwise.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -20,18 +32,47 @@ class LatencyReport:
     makespan: float                   # last finish − first arrival
     throughput_tok_s: float
     mean_wait: float                  # arrival → admission
+    # TTFT tail and decode-gap percentiles (reported separately so prefill
+    # policy changes that trade TTFT against inter-token latency are visible)
+    p99_ttft: float = float("nan")
+    p50_itl: float = float("nan")     # median inter-token gap
+    p99_itl: float = float("nan")     # tail inter-token gap (HOL stalls)
 
     def row(self) -> str:
         return (f"{self.policy:10s} n={self.n_requests:5d} "
                 f"avg={self.avg_per_token_latency * 1e3:9.2f} ms/tok  "
                 f"p90={self.p90_per_token_latency * 1e3:9.2f} ms/tok  "
-                f"ttft={self.avg_ttft:7.2f} s  tput={self.throughput_tok_s:9.1f} tok/s")
+                f"ttft={self.avg_ttft:7.2f} s  "
+                f"p99_itl={self.p99_itl * 1e3:8.2f} ms  "
+                f"tput={self.throughput_tok_s:9.1f} tok/s")
 
 
 def _mean(a: np.ndarray) -> float:
     """NaN-safe mean: empty inputs (e.g. a run where no request records
     ``first_token_time``) yield NaN without the numpy empty-slice warning."""
     return float(a.mean()) if len(a) else float("nan")
+
+
+def _pct(a: np.ndarray, q: float) -> float:
+    return float(np.percentile(a, q)) if len(a) else float("nan")
+
+
+def itl_samples(finished: Sequence[Request]) -> np.ndarray:
+    """Inter-token-latency samples pooled across requests.
+
+    Per request: consecutive gaps of ``token_times`` when recorded (the
+    first token is TTFT, not ITL, so only gaps *between* output tokens
+    count); otherwise the mean gap (finish − first_token)/(n − 1). Requests
+    with fewer than two output tokens contribute nothing."""
+    samples: List[float] = []
+    for r in finished:
+        if len(r.token_times) >= 2:
+            samples.extend(np.diff(r.token_times))
+        elif (r.true_length >= 2 and r.first_token_time is not None
+              and r.finish_time is not None):
+            samples.append((r.finish_time - r.first_token_time)
+                           / (r.true_length - 1))
+    return np.asarray(samples, dtype=float)
 
 
 def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
@@ -46,6 +87,7 @@ def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
                      if r.first_token_time is not None])
     waits = np.array([(r.start_time - r.arrival_time) for r in finished
                       if r.start_time is not None])
+    itl = itl_samples(finished)
     t0 = min(r.arrival_time for r in finished)
     t1 = max(r.finish_time for r in finished)
     tokens = sum(r.true_length for r in finished)
@@ -58,4 +100,7 @@ def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
         makespan=float(t1 - t0),
         throughput_tok_s=float(tokens / max(t1 - t0, 1e-9)),
         mean_wait=_mean(waits),
+        p99_ttft=_pct(ttft, 99),
+        p50_itl=_pct(itl, 50),
+        p99_itl=_pct(itl, 99),
     )

@@ -6,11 +6,17 @@ iteration-time model, so 2000-request bursts and arrival-rate sweeps (paper
 §IV-D) run in milliseconds on CPU. Semantics match vLLM-style iteration-level
 batching:
 
-* each iteration, every running request decodes exactly one token;
-* newly admitted requests first pay a prefill cost proportional to their
-  prompt length (folded into the iteration in which they are admitted,
-  like vLLM's mixed prefill/decode steps);
-* iteration time = base + per-token-in-batch cost (+ prefill term), which is
+* each iteration, every running request whose prompt is fully KV-resident
+  decodes exactly one token;
+* prefill work is folded into the iteration in which it happens (vLLM's
+  mixed prefill/decode steps): the core hands this backend chunks, the
+  backend accumulates their token count, and the next ``decode`` charges
+  ``prefill_per_token_s`` for them. With chunking off a prompt is one chunk
+  and this reduces to the historical admit-then-prefill-whole-prompt cost;
+  with ``prefill_chunk_tokens`` set, a long prompt spreads its prefill cost
+  over many cheap iterations while co-resident decodes keep advancing —
+  ``CostModel.iteration_time`` already models exactly this mixed step.
+* iteration time = base + per-decoding-seq cost + per-prefill-token cost,
   the standard two-parameter decode-latency model for batched LLM serving.
 
 Because admission goes through the core's KV gate, a simulated run under a
@@ -30,7 +36,7 @@ from typing import List, Optional, Sequence
 
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
-from repro.serving.core import ServingCore, VirtualClock
+from repro.serving.core import PrefillChunk, ServingCore, VirtualClock
 from repro.serving.kv_cache import BlockAllocator
 from repro.serving.metrics import LatencyReport, report
 
@@ -47,8 +53,8 @@ class CostModel:
 
 
 class SimBackend:
-    """Cost-model execution: prefill records the admitted tokens, decode
-    charges one batched iteration and advances every running request."""
+    """Cost-model execution: prefill records the chunked-in tokens, decode
+    charges one mixed iteration and advances every prompt-resident request."""
 
     def __init__(self, cost: CostModel = CostModel()) -> None:
         self.cost = cost
@@ -62,22 +68,29 @@ class SimBackend:
         # forced-length protocol: residency is prompt + full completion
         return req.prompt_len + req.true_length
 
-    def prefill(self, admitted: Sequence[Request], now: float) -> float:
+    def prefill_total(self, req: Request) -> int:
         # recompute preemption: a re-admitted request re-prefills its prompt
         # plus everything it had already generated (vLLM recompute semantics)
-        self._prefill_tokens += sum(
-            r.prompt_len + (r.tokens_done if r.preempt_count else 0)
-            for r in admitted)
+        return req.prompt_len + (req.tokens_done if req.preempt_count else 0)
+
+    def prefill(self, chunks: Sequence[PrefillChunk], now: float) -> float:
+        # cost is charged by the decode phase of the same mixed iteration
+        self._prefill_tokens += sum(end - start for _r, start, end in chunks)
         return now
 
     def decode(self, now: float) -> float:
         running = self.core.scheduler.running
-        now += self.cost.iteration_time(len(running), self._prefill_tokens)
+        ready = [r for r in running if self.core.decode_ready(r)]
+        if not ready and not self._prefill_tokens:
+            return now                # nothing resident and nothing chunked
+        now += self.cost.iteration_time(len(ready), self._prefill_tokens)
         self._prefill_tokens = 0
-        for r in running:
+        for r in ready:
             r.tokens_done += 1
             if r.first_token_time is None:
                 r.first_token_time = now
+            if self.core.record_token_times:
+                r.token_times.append(now)
         return now
 
     def release(self, req: Request) -> None:
@@ -87,15 +100,20 @@ class SimBackend:
 def simulate(requests: Sequence[Request], scheduler: Scheduler, *,
              cost: CostModel = CostModel(), max_time: float = 1e7,
              kv_blocks: Optional[int] = None, block_size: int = 16,
-             ) -> List[Request]:
+             prefill_chunk_tokens: Optional[int] = None,
+             record_token_times: bool = False) -> List[Request]:
     """Run to completion; returns the finished requests (with timestamps).
 
     ``kv_blocks`` bounds the KV cache (in ``block_size``-token blocks);
-    ``None`` keeps the historical memory-unbounded behaviour."""
+    ``None`` keeps the historical memory-unbounded behaviour.
+    ``prefill_chunk_tokens`` enables mixed prefill/decode iterations
+    (see :class:`~repro.serving.core.ServingCore`)."""
     allocator = (BlockAllocator(kv_blocks, block_size) if kv_blocks
                  else BlockAllocator.unbounded(block_size))
     core = ServingCore(scheduler, SimBackend(cost), allocator=allocator,
-                       clock=VirtualClock())
+                       clock=VirtualClock(),
+                       prefill_chunk_tokens=prefill_chunk_tokens,
+                       record_token_times=record_token_times)
     core.submit(requests)
     return core.run(max_time=max_time)
 
@@ -103,7 +121,8 @@ def simulate(requests: Sequence[Request], scheduler: Scheduler, *,
 def run_policy(requests: Sequence[Request], policy, *, max_batch: int = 16,
                continuous: bool = True, cost: CostModel = CostModel(),
                starvation_threshold: float = 120.0,
-               kv_blocks: Optional[int] = None) -> LatencyReport:
+               kv_blocks: Optional[int] = None,
+               prefill_chunk_tokens: Optional[int] = None) -> LatencyReport:
     """Convenience: fresh scheduler + simulate + report."""
     # deep-ish copy so one policy run doesn't pollute another
     reqs = [Request(r.req_id, r.prompt, r.arrival_time, r.prompt_len,
@@ -111,6 +130,7 @@ def run_policy(requests: Sequence[Request], policy, *, max_batch: int = 16,
     sched = Scheduler(policy=policy, max_batch=max_batch,
                       continuous=continuous,
                       starvation_threshold=starvation_threshold)
-    finished = simulate(reqs, sched, cost=cost, kv_blocks=kv_blocks)
+    finished = simulate(reqs, sched, cost=cost, kv_blocks=kv_blocks,
+                        prefill_chunk_tokens=prefill_chunk_tokens)
     assert len(finished) == len(requests), (len(finished), len(requests))
     return report(policy.name, finished)

@@ -1,0 +1,203 @@
+"""Chunked prefill (mixed prefill/decode steps) through the ServingCore.
+
+Covers the exact stall chunking eliminates — a running short request must
+keep decoding (and finish) while a co-resident long prompt is still
+streaming its prefill — plus preemption of half-prefilled requests, the
+core's chunk-planning invariants, and real-engine output equivalence.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.scheduler.policies import fcfs, oracle_sjf
+from repro.core.scheduler.request import Request
+from repro.core.scheduler.scheduler import Scheduler
+from repro.serving import ServingCore, VirtualClock, itl_samples
+from repro.serving.simulator import CostModel, SimBackend, simulate
+
+
+def _cost():
+    return CostModel(iter_base_s=0.01, per_seq_s=0.0,
+                     prefill_per_token_s=0.001)
+
+
+# ------------------------------------------------------------- core planning
+def test_plan_chunks_packs_whole_fits_and_head_of_line_partial():
+    """Whole-fitting requests pack; a partial take only happens as the
+    step's *first* chunk (full budget) — mid-pack requests that don't fit
+    whole are skipped, keeping dispatch shapes bounded."""
+    sched = Scheduler(policy=fcfs(), max_batch=8)
+    core = ServingCore(sched, SimBackend(_cost()), clock=VirtualClock(),
+                       prefill_chunk_tokens=64)
+    reqs = [Request(0, "a", 0.0, 16, 4), Request(1, "b", 0.0, 16, 4),
+            Request(2, "c", 0.0, 100, 4), Request(3, "d", 0.0, 32, 4)]
+    sched.add_requests(reqs)
+    sched.schedule(0.0)
+    chunks = core._plan_chunks()
+    # 16 + 16 pack whole; 2 (needs 100) is skipped mid-pack; 3 still fits
+    assert [(r.req_id, s, e) for r, s, e in chunks] == [
+        (0, 0, 16), (1, 0, 16), (3, 0, 32)]
+    for r, _s, e in chunks:
+        r.prefilled_tokens = e
+    # next step: request 2 is head-of-line and takes the full budget,
+    # split across as many steps as it needs
+    assert [(r.req_id, s, e) for r, s, e in core._plan_chunks()] == [
+        (2, 0, 64)]
+
+
+def test_plan_without_budget_is_prefill_to_completion():
+    sched = Scheduler(policy=fcfs(), max_batch=8)
+    core = ServingCore(sched, SimBackend(_cost()), clock=VirtualClock())
+    sched.add_requests([Request(0, "a", 0.0, 500, 4)])
+    sched.schedule(0.0)
+    (req, start, end), = core._plan_chunks()
+    assert (start, end) == (0, 500)
+
+
+def test_invalid_chunk_budget_rejected():
+    with pytest.raises(ValueError):
+        ServingCore(Scheduler(policy=fcfs()), SimBackend(), clock=VirtualClock(),
+                    prefill_chunk_tokens=0)
+
+
+# ---------------------------------------------- mixed steps (deterministic)
+def test_short_request_finishes_before_long_prompt_prefill_completes():
+    """VirtualClock + SimBackend: with chunking, a running short request
+    keeps decoding through a long prompt's prefill and finishes *before*
+    the long prompt emits its first token; unchunked, the monolithic
+    prefill iteration stalls it past that point."""
+    def reqs():
+        return [Request(0, "short", 0.0, 10, 3),
+                Request(1, "long", 0.01, 2000, 5)]
+
+    un = {r.req_id: r for r in simulate(
+        reqs(), Scheduler(policy=fcfs(), max_batch=4), cost=_cost())}
+    ch = {r.req_id: r for r in simulate(
+        reqs(), Scheduler(policy=fcfs(), max_batch=4), cost=_cost(),
+        prefill_chunk_tokens=100)}
+
+    # the stall chunking eliminates: short outlives the long prefill only
+    # in the unchunked run
+    assert un[0].finish_time > un[1].first_token_time - 0.011
+    assert ch[0].finish_time < ch[1].first_token_time
+    assert ch[0].finish_time < un[0].finish_time
+    # chunking trades the long prompt's TTFT for everyone else's ITL
+    assert ch[1].first_token_time > un[1].first_token_time
+    # nobody is dropped or short-changed
+    assert all(r.tokens_done == r.true_length for r in ch.values())
+    assert ch[1].prefilled_tokens == 2000
+
+
+def test_chunked_itl_tail_beats_unchunked_under_long_prompt_burst():
+    """Gap-based p99 ITL: background decoders see the long-prompt burst as
+    one huge inter-token gap unchunked, many small ones chunked."""
+    def reqs():
+        bg = [Request(i, f"bg{i}", 0.0, 8, 40) for i in range(4)]
+        burst = [Request(10 + i, f"long{i}", 0.05, 3000, 4) for i in range(3)]
+        return bg + burst
+
+    kw = dict(cost=_cost(), record_token_times=True)
+    un = simulate(reqs(), Scheduler(policy=fcfs(), max_batch=8), **kw)
+    ch = simulate(reqs(), Scheduler(policy=fcfs(), max_batch=8),
+                  prefill_chunk_tokens=150, **kw)
+    bg_un = [r for r in un if r.req_id < 10]
+    bg_ch = [r for r in ch if r.req_id < 10]
+    p99_un = np.percentile(itl_samples(bg_un), 99)
+    p99_ch = np.percentile(itl_samples(bg_ch), 99)
+    assert p99_ch < 0.5 * p99_un
+
+
+def test_preemption_of_half_prefilled_request_recovers():
+    """A victim evicted mid-prefill loses its partial residency and
+    re-prefills from offset 0 to its full target on re-admission."""
+    reqs = [Request(0, "long", 0.0, 2000, 5), Request(1, "short", 0.2, 8, 2)]
+    sched = Scheduler(policy=oracle_sjf(), max_batch=1, preemption=True)
+    fin = {r.req_id: r for r in simulate(reqs, sched, cost=_cost(),
+                                         prefill_chunk_tokens=64)}
+    long, short = fin[0], fin[1]
+    assert long.preempt_count >= 1               # evicted mid-prefill
+    assert short.finish_time < long.first_token_time
+    assert long.tokens_done == 5                 # still completed fully
+    assert long.prefilled_tokens == 2000         # re-prefilled from scratch
+
+
+def test_half_prefilled_requests_do_not_decode():
+    """Step-level invariant: while a long prompt is mid-prefill its
+    tokens_done stays 0 even though it sits in the running queue."""
+    sched = Scheduler(policy=fcfs(), max_batch=4)
+    clock = VirtualClock()
+    core = ServingCore(sched, SimBackend(_cost()), clock=clock,
+                       prefill_chunk_tokens=50)
+    sched.add_requests([Request(0, "long", 0.0, 500, 3),
+                        Request(1, "co", 0.0, 10, 2)])
+    for _ in range(3):                           # a few mixed steps
+        clock.wait_until(core.step(clock.now()))
+    long = next(r for r in sched.running if r.req_id == 0)
+    assert 0 < long.prefilled_tokens < 500
+    assert long.tokens_done == 0 and long.first_token_time is None
+
+
+def test_kv_reservation_is_full_demand_at_admission():
+    """Chunking never splits the KV reservation: blocks for prompt + full
+    completion are held from the first chunk on."""
+    sched = Scheduler(policy=fcfs(), max_batch=4)
+    backend = SimBackend(_cost())
+    from repro.serving import BlockAllocator
+    alloc = BlockAllocator(total_blocks=1000, block_size=16)
+    core = ServingCore(sched, backend, allocator=alloc, clock=VirtualClock(),
+                       prefill_chunk_tokens=32)
+    req = Request(0, "long", 0.0, 320, 16)       # (320+16)/16 = 21 blocks
+    sched.add_requests([req])
+    core.step(0.0)
+    assert 0 < req.prefilled_tokens < 320
+    assert alloc.reserved(0) == 21
+
+
+# ----------------------------------------------------------- real engine
+@pytest.fixture(scope="module")
+def real_engine_setup():
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tfm
+
+    cfg = get_smoke_config("llama3_2_3b").replace(dtype="float32",
+                                                  vocab_size=2048)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _real_reqs():
+    return [Request(i, " ".join(f"w{i}x{j}" for j in range(3 + 7 * i)),
+                    0.0, 8, 4 + i) for i in range(4)]
+
+
+def test_real_engine_chunked_matches_unchunked_outputs(real_engine_setup):
+    """Continuation chunks attend over the resident prefix at the right
+    offsets, so greedy outputs are identical chunked vs unchunked."""
+    from repro.serving.engine import Engine
+
+    cfg, params = real_engine_setup
+    outs = {}
+    for chunk in (None, 8):
+        eng = Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=4),
+                     cache_len=64, prompt_len=32, prefill_chunk_tokens=chunk,
+                     record_tokens=True)
+        eng.submit(_real_reqs())
+        fin = eng.run()
+        assert len(fin) == 4
+        outs[chunk] = {r.req_id: r.generated_tokens for r in fin}
+        if chunk:
+            assert eng.backend.extend_dispatches > 0   # chunking really ran
+        assert eng.allocator.free_blocks == eng.allocator.total_blocks
+    assert outs[None] == outs[8]
+
+
+def test_real_engine_rejects_chunking_for_recurrent_families(real_engine_setup):
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tfm
+    from repro.serving.engine import Engine
+
+    cfg = get_smoke_config("rwkv6_7b").replace(dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="attention-family"):
+        Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=2),
+               cache_len=64, prompt_len=16, prefill_chunk_tokens=8)

@@ -80,7 +80,10 @@ def test_simulator_defers_admission_under_tight_kv_budget():
 
 
 def test_simulator_raises_on_never_fitting_request():
-    with pytest.raises(MemoryError):
+    # message reports a consistent (request id, token demand, block math)
+    # triple: 100+100 tokens = ceil(200/16) = 13 blocks vs 2-block capacity
+    with pytest.raises(MemoryError, match=r"request 0 .* 200 tokens = 13 "
+                                          r"blocks of 16, .* 2 blocks"):
         simulate([Request(0, "p", 0.0, 100, 100)],
                  Scheduler(policy=fcfs(), max_batch=1), kv_blocks=2)
 

@@ -78,11 +78,13 @@ def test_real_backend_preserves_progress_on_readmission():
     victim = _req(0, 100)
     victim.tokens_done, victim.preempt_count = 37, 1
     victim.first_token_time = 0.5
-    eng.backend.prefill([victim], now=1.0)
+    eng.backend.prefill([(victim, 0, eng.backend.prefill_total(victim))],
+                        now=1.0)
     assert victim.tokens_done == 37
     assert victim.first_token_time == 0.5
     fresh = _req(1, 10)
-    eng.backend.prefill([fresh], now=2.0)
+    eng.backend.prefill([(fresh, 0, eng.backend.prefill_total(fresh))],
+                        now=2.0)
     assert fresh.tokens_done == 1
     assert fresh.first_token_time is not None
 
