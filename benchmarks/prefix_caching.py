@@ -1,0 +1,198 @@
+"""Prefix-caching benchmark: TTFT/throughput under shared-system-prompt load.
+
+Scenario (both execution modes): a stream of requests that all begin with
+the same long system prompt (the dominant real-traffic sharing pattern:
+assistant preambles, few-shot templates, reasoning scaffolds) followed by a
+short unique user suffix. Without caching every request re-prefills the
+whole prompt — a fixed TTFT floor of ``prefill_per_token x prompt`` that no
+scheduling policy can remove. With ``prefix_caching=True`` the first
+request's prompt blocks are committed to the refcounted cache and every
+later admission reserves only the unique suffix, starts chunked prefill at
+the cached offset, and reaches its first token after suffix-only work.
+
+Reported per mode (JSON via ``--json``, one ``emit`` CSV row for the repo
+convention): mean/p99 TTFT of the shared-prefix (warm) requests with caching
+off vs on, prefix hit rate, prefill tokens saved, and throughput. The sim
+comparison asserts the ISSUE acceptance bar — **>= 2x lower mean TTFT** for
+shared-prefix requests — and the real-engine comparison asserts greedy
+outputs are **bit-identical** with caching on vs off (KV reuse is exact, not
+an approximation).
+
+    PYTHONPATH=src python -m benchmarks.prefix_caching            # full
+    PYTHONPATH=src python -m benchmarks.prefix_caching --smoke --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.scheduler.policies import fcfs
+from repro.core.scheduler.request import Request
+from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.metrics import report
+from repro.serving.simulator import CostModel, simulate
+
+
+def _stats(finished, core=None):
+    """Warm-request TTFT split + cache counters for one run. The cold-start
+    request (earliest arrival) is excluded from the warm set — it is the
+    miss that populates the cache in both variants."""
+    cold = min(finished, key=lambda r: r.arrival_time)
+    warm = [r for r in finished if r is not cold]
+    ttft = np.array([r.first_token_time - r.arrival_time for r in warm])
+    rep = report("fcfs", finished)
+    return {
+        "n_requests": len(finished),
+        "ttft_mean_warm_s": float(ttft.mean()),
+        "ttft_p99_warm_s": float(np.percentile(ttft, 99)),
+        "ttft_cold_s": float(cold.first_token_time - cold.arrival_time),
+        "prefix_hit_rate": float(rep.prefix_hit_rate),
+        "prefill_tokens_saved": float(rep.prefill_tokens_saved),
+        "throughput_tok_s": rep.throughput_tok_s,
+    }
+
+
+def _row(label, s):
+    print(f"  {label:10s} warm ttft mean={s['ttft_mean_warm_s'] * 1e3:8.2f} ms"
+          f"  p99={s['ttft_p99_warm_s'] * 1e3:8.2f} ms  "
+          f"hit_rate={s['prefix_hit_rate']:5.2f}  "
+          f"saved={s['prefill_tokens_saved']:9.0f} tok  "
+          f"tput={s['throughput_tok_s']:8.1f} tok/s")
+
+
+# ---------------------------------------------------------------- simulator
+def run_sim(*, n: int = 32, shared_words: int = 1024, unique_words: int = 63,
+            out_len: int = 32, gap_s: float = 0.7) -> dict:
+    """Discrete-event comparison (A100-scale cost constants). Arrivals are
+    spaced so each prompt's prefill commits before the next admission — the
+    steady-state regime where every request after the first is a hit."""
+    prompt_len = 1 + shared_words + unique_words        # CLS + words
+    prefix = " ".join(f"sys{i}" for i in range(shared_words))
+
+    def reqs():
+        return [Request(i, prefix + " " +
+                        " ".join(f"u{i}w{j}" for j in range(unique_words)),
+                        i * gap_s, prompt_len, out_len) for i in range(n)]
+
+    out = {"shared_prompt_tokens": shared_words}
+    for label, caching in (("uncached", False), ("cached", True)):
+        fin = simulate(reqs(), Scheduler(policy=fcfs(), max_batch=8),
+                       cost=CostModel(), prefix_caching=caching)
+        assert len(fin) == n
+        out[label] = _stats(fin)
+        _row(label, out[label])
+    speedup = (out["uncached"]["ttft_mean_warm_s"]
+               / out["cached"]["ttft_mean_warm_s"])
+    out["warm_ttft_speedup"] = speedup
+    # the ISSUE acceptance bar: >= 2x lower mean TTFT for shared-prefix
+    # requests in sim mode
+    assert speedup >= 2.0, f"warm-TTFT speedup {speedup:.2f}x < 2x"
+    print(f"  [sim] warm mean TTFT {speedup:.1f}x lower with prefix caching")
+    return out
+
+
+# -------------------------------------------------------------- real engine
+def run_real(*, arch: str = "llama3_2_3b", n_warm: int = 6,
+             shared_words: int = 40, unique_words: int = 8,
+             prompt_len: int = 64, out_len: int = 6) -> dict:
+    """Wall-clock comparison on the jitted engine (smoke-scale model).
+
+    Two-phase submits (donor first, then the warm cohort) make the hit
+    pattern deterministic regardless of host speed. Asserts token-for-token
+    identical greedy outputs cached vs uncached."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tfm
+    from repro.serving.engine import Engine
+
+    cfg = get_smoke_config(arch).replace(dtype="float32", vocab_size=2048)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    prefix = " ".join(f"sys{i}" for i in range(shared_words))
+    wc = 1 + shared_words + unique_words
+
+    def run(caching):
+        eng = Engine(cfg, params,
+                     Scheduler(policy=fcfs(), max_batch=n_warm + 1),
+                     cache_len=2 * prompt_len, prompt_len=prompt_len,
+                     prefix_caching=caching, record_tokens=True)
+        eng.warmup()
+        eng.submit([Request(0, prefix + " donor tail words", 0.0, wc,
+                            out_len)])
+        eng.run()
+        eng.submit([Request(10 + i, prefix + " " +
+                            " ".join(f"u{i}w{j}" for j in range(unique_words)),
+                            0.0, wc, out_len) for i in range(n_warm)])
+        eng.run()
+        assert len(eng.finished) == n_warm + 1
+        return eng
+
+    out = {"shared_words": shared_words}
+    tokens = {}
+    for label, caching in (("uncached", False), ("cached", True)):
+        eng = run(caching)
+        tokens[label] = {r.req_id: r.generated_tokens for r in eng.finished}
+        out[label] = _stats(eng.finished)
+        out[label]["prefix_installs"] = eng.backend.prefix_installs
+        out[label]["prefix_tokens_copied"] = eng.backend.prefix_tokens_copied
+        _row(label, out[label])
+    out["identical_outputs"] = tokens["uncached"] == tokens["cached"]
+    assert out["identical_outputs"], "cached decode diverged from uncached"
+    assert out["cached"]["prefix_installs"] == n_warm
+    print("  [real] cached outputs identical to uncached ✓")
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: prove both modes run, the sim "
+                         "speedup holds, and real outputs match")
+    ap.add_argument("--json", default=None, help="write results to this path")
+    ap.add_argument("--mode", choices=("sim", "real", "both"), default="both")
+    args = ap.parse_args(argv)
+
+    results = {}
+    if args.mode in ("sim", "both"):
+        print("simulator (A100-scale constants):")
+        kw = (dict(n=8, shared_words=512, unique_words=31) if args.smoke
+              else {})
+        results["sim"] = run_sim(**kw)
+    if args.mode in ("real", "both"):
+        print("real engine (smoke-scale model, wall clock):")
+        kw = (dict(n_warm=3, shared_words=20, unique_words=6, prompt_len=32)
+              if args.smoke else {})
+        results["real"] = run_real(**kw)
+
+    for mode, res in results.items():
+        # CI smoke contract: the cache counters and both TTFT axes exist
+        for variant in ("uncached", "cached"):
+            assert {"ttft_mean_warm_s", "ttft_p99_warm_s", "prefix_hit_rate",
+                    "prefill_tokens_saved"} <= set(res[variant])
+        if mode == "sim":
+            speedup = (res["uncached"]["ttft_mean_warm_s"]
+                       / res["cached"]["ttft_mean_warm_s"])
+            derived = (f"warm-request mean TTFT {speedup:.1f}x lower than "
+                       f"uncached "
+                       f"(hit_rate={res['cached']['prefix_hit_rate']:.2f})")
+        else:
+            # the smoke-scale model is too small for prefill compute to
+            # dominate wall TTFT; the real-engine row reports what it
+            # *asserts* — exact KV reuse — plus the accounting
+            derived = (f"outputs identical cached vs uncached; "
+                       f"{res['cached']['prefill_tokens_saved']:.0f} prefill "
+                       f"tokens saved "
+                       f"(hit_rate={res['cached']['prefix_hit_rate']:.2f})")
+        emit(f"prefix_caching_{mode}", res["cached"]["ttft_mean_warm_s"] * 1e6,
+             derived)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -38,6 +38,11 @@ class Request:
     # already-generated tokens after preemption) stays frozen while the
     # request is resident instead of drifting as ``tokens_done`` grows.
     prefill_target: Optional[int] = None
+    # Prefix caching: prompt tokens this request reused from the KV prefix
+    # cache instead of re-prefilling, accumulated across (re-)admissions.
+    # ``None`` means the serving core ran with caching disabled — metrics
+    # report NaN rather than a misleading 0% hit rate; 0 is a true miss.
+    cached_prefix_tokens: Optional[int] = None
     boosted: bool = False                     # starvation-prevention flag
     preempt_count: int = 0                    # recompute-preemption evictions
     # Per-token completion timestamps (only filled when the serving core is

@@ -3,7 +3,7 @@ simulator backend, KV accounting."""
 from repro.serving.core import (PrefillChunk, ServingCore, VirtualClock,
                                 WallClock)
 from repro.serving.engine import Engine, RealBackend, serve
-from repro.serving.kv_cache import BlockAllocator
+from repro.serving.kv_cache import BlockAllocator, prefix_chunk_hashes
 from repro.serving.metrics import LatencyReport, itl_samples, report
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.simulator import CostModel, SimBackend, run_policy, simulate

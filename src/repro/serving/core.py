@@ -29,18 +29,34 @@ TTFT of the long prompt pays for inter-token latency of everyone else.
 ``prefill_chunk_tokens=None`` (default) preserves the historical
 prefill-to-completion behaviour exactly.
 
-New serving behavior (prefix caching, multi-replica dispatch) lands here once
-and both modes inherit it.
+**Prefix caching** (``prefix_caching=True``). Real multi-user traffic shares
+prompt prefixes — system prompts, few-shot templates — and re-prefilling
+them per request wastes exactly the compute the scheduler protects TTFT
+from. At admission the core hashes the request's prompt into block-sized
+chunk chains (:func:`~repro.serving.kv_cache.prefix_chunk_hashes`), asks the
+allocator for the longest *committed* cached chain, and shares those blocks
+instead of claiming fresh ones; the request then starts life with
+``prefilled_tokens`` already at the cached offset, so chunk planning only
+streams the non-shared suffix and the backend never recomputes the prefix
+(the real engine copies the cached KV fragments into the request's lane,
+the simulator simply charges fewer prefill tokens). A prompt's own blocks
+become hitable (``allocator.commit``) the moment its prefill completes.
+The hit is capped at ``prefill_target - 1`` tokens: the final prompt
+position is always recomputed so the backend has logits to emit the first
+output token from (vLLM does the same on a full-prompt hit).
+
+New serving behavior (multi-replica dispatch, …) lands here once and both
+modes inherit it.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Deque, List, Optional, Protocol, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Protocol, Sequence, Tuple
 
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
-from repro.serving.kv_cache import BlockAllocator
+from repro.serving.kv_cache import BlockAllocator, prefix_chunk_hashes
 
 # One planned unit of prefill work: (request, start, end) in the backend's
 # prompt-token space — prefill prompt tokens [start, end) of this request.
@@ -120,6 +136,14 @@ class ExecutionBackend(Protocol):
         """Free backend residency (slot, …) for a retired/evicted request."""
         ...
 
+    def prefix_tokens(self, req: Request) -> Sequence[int]:
+        """The token-id stream eligible for prefix sharing, in this
+        backend's prompt-token space (the real engine's encoded prompt; the
+        simulator's synthetic word-hash stream). Requests whose streams
+        share a leading run of whole KV blocks share those blocks. Return
+        ``()`` to opt a request out of caching."""
+        ...
+
 
 class ServingCore:
     """The single KV-aware step loop behind the engine and the simulator.
@@ -131,13 +155,19 @@ class ServingCore:
     ``record_token_times`` — have backends append a wall/virtual timestamp to
     ``Request.token_times`` per generated token, enabling gap-based
     inter-token-latency percentiles in :mod:`repro.serving.metrics`.
+
+    ``prefix_caching`` — share KV blocks between requests whose prompts have
+    a common prefix (see module docstring). Off by default: caching changes
+    which blocks admissions reserve, so the historical behaviour is opted
+    into, never silently altered.
     """
 
     def __init__(self, scheduler: Scheduler, backend: ExecutionBackend, *,
                  allocator: Optional[BlockAllocator] = None,
                  clock: Optional[Clock] = None,
                  prefill_chunk_tokens: Optional[int] = None,
-                 record_token_times: bool = False) -> None:
+                 record_token_times: bool = False,
+                 prefix_caching: bool = False) -> None:
         if prefill_chunk_tokens is not None and prefill_chunk_tokens <= 0:
             raise ValueError("prefill_chunk_tokens must be positive or None")
         self.scheduler = scheduler
@@ -146,6 +176,12 @@ class ServingCore:
         self.clock: Clock = clock or WallClock()
         self.prefill_chunk_tokens = prefill_chunk_tokens
         self.record_token_times = record_token_times
+        self.prefix_caching = prefix_caching
+        # req_id -> full chunk-hash chain, computed once per residency: the
+        # KV gate re-evaluates every waiting request each cycle under
+        # back-pressure, and re-tokenizing + re-hashing a long shared prompt
+        # there would make admission O(prompt_len) per cycle
+        self._hash_memo: Dict[int, List[int]] = {}
         self.finished: List[Request] = []
         self._pending: Deque[Request] = deque()
         scheduler.admit_hook = self._reserve
@@ -171,6 +207,20 @@ class ServingCore:
             req.prefill_target = self.backend.prefill_total(req)
         return req.prefill_target
 
+    def _prefix_hashes(self, req: Request) -> List[int]:
+        """The request's shareable chunk-hash chain, capped so at least the
+        last prompt position is always recomputed (the backend needs its
+        logits to emit the first output token). Empty when caching is off."""
+        if not self.prefix_caching:
+            return []
+        chain = self._hash_memo.get(req.req_id)
+        if chain is None:
+            chain = prefix_chunk_hashes(self.backend.prefix_tokens(req),
+                                        self.allocator.block_size)
+            self._hash_memo[req.req_id] = chain
+        cap = max(self._target(req) - 1, 0) // self.allocator.block_size
+        return chain[:cap]
+
     # ---------------------------------------------------------------- hooks
     def _reserve(self, req: Request) -> bool:
         """Scheduler admission gate: reserve KV blocks or keep the request
@@ -178,11 +228,22 @@ class ServingCore:
 
         The *full* demand is reserved up front even under chunked prefill —
         a half-prefilled request must never deadlock waiting for blocks its
-        own decode phase needs."""
+        own decode phase needs. With prefix caching, the leading blocks
+        that match a committed cached chain are shared rather than newly
+        claimed, and the request starts prefill at the cached offset."""
         need = self.backend.kv_demand(req)
-        if not self.allocator.can_allocate(need):
+        hashes = self._prefix_hashes(req)
+        if not self.allocator.can_allocate(need, hashes):
             return False
-        self.allocator.allocate(req.req_id, need)
+        shared = self.allocator.allocate(req.req_id, need, hashes)
+        if self.prefix_caching:
+            cached = shared * self.allocator.block_size
+            if cached:
+                req.prefilled_tokens = cached
+            # None → int marks "caching was on for this request" (metrics
+            # stay NaN-safe when it is off); accumulates across preemption
+            # re-admissions so tokens-saved reflects every avoided prefill
+            req.cached_prefix_tokens = (req.cached_prefix_tokens or 0) + cached
         return True
 
     def _evict(self, req: Request) -> None:
@@ -196,6 +257,7 @@ class ServingCore:
         for r in self.scheduler.retire_finished(now):
             self.allocator.free(r.req_id)
             self.backend.release(r)
+            self._hash_memo.pop(r.req_id, None)
             self.finished.append(r)
 
     # ----------------------------------------------------------------- loop
@@ -245,6 +307,11 @@ class ServingCore:
             now = self.backend.prefill(chunks, now)
             for req, _start, end in chunks:
                 req.prefilled_tokens = end
+                if self.prefix_caching and end >= self._target(req):
+                    # prompt fully resident: its content-named blocks become
+                    # hitable for later admissions (the real backend stored
+                    # the matching KV fragments during this prefill call)
+                    self.allocator.commit(req.req_id)
             self._retire(now)            # true_length == 1 finishes at prefill
         if self.scheduler.running:
             now = self.backend.decode(now)
@@ -280,16 +347,28 @@ class ServingCore:
                 if self._pending:
                     self.clock.wait_until(self._pending[0].arrival_time)
                     continue
-                smallest = min(self.scheduler.waiting,
-                               key=self.backend.kv_demand)
+                # effective demand: blocks a request must newly claim, after
+                # subtracting the cached-prefix blocks it would share — with
+                # caching on, the cheapest-to-admit request is the one with
+                # the smallest *non-shared* footprint, not the smallest
+                # prompt (its full demand may exceed what admission needs)
+                def _new_blocks(r: Request) -> int:
+                    return (self.allocator.blocks_for(self.backend.kv_demand(r))
+                            - self.allocator.cached_prefix_blocks(
+                                self._prefix_hashes(r)))
+                smallest = min(self.scheduler.waiting, key=_new_blocks)
                 tokens = self.backend.kv_demand(smallest)
+                shared = self.allocator.cached_prefix_blocks(
+                    self._prefix_hashes(smallest))
+                cached_note = (f" ({shared} reusable from the prefix cache)"
+                               if shared else "")
                 raise MemoryError(
                     f"KV budget can never admit remaining requests: request "
                     f"{smallest.req_id} has the smallest demand, "
                     f"{tokens} tokens = {self.allocator.blocks_for(tokens)} "
-                    f"blocks of {self.allocator.block_size}, but the cache "
-                    f"only has {self.allocator.total_blocks} blocks "
-                    f"({self.allocator.free_blocks} free)")
+                    f"blocks of {self.allocator.block_size}{cached_note}, "
+                    f"but the cache only has {self.allocator.total_blocks} "
+                    f"blocks ({self.allocator.free_blocks} free)")
             self.clock.wait_until(new_now)
             if log_every and new_now - last_log > log_every:
                 last_log = new_now

@@ -29,6 +29,21 @@ attention-family model (DENSE/MoE/VLM) and an append-buffer cache
 (``prompt_len <= cache_len``, no sliding window); recurrent families carry
 cross-chunk state that ``forward_seq`` does not externalize.
 
+**Prefix caching** (``prefix_caching=True`` on :class:`Engine` /
+:func:`serve`): the core's allocator refcounts content-named KV blocks, and
+this backend keeps the matching device-side KV: when a request's prompt
+finishes prefilling, the per-block K/V slices of its (real-token) prefix are
+copied out of its lane into a hash-keyed **fragment store**; when a later
+admission hits that prefix, the backend claims a slot, concatenates the
+chain's fragments, writes them into the new lane at positions ``[0,
+cached)``, sets the lane ``pos``, and only runs ``_extend_chunk`` on the
+non-shared suffix. Because attention at position i depends only on tokens
+``<= i``, the donor's prefix KV is bit-identical to what the recipient would
+have computed itself — greedy outputs with caching on equal caching off
+token-for-token (asserted in ``tests/test_prefix_caching.py``). The store
+shrinks in lockstep with the allocator's LRU: an eviction listener drops the
+fragment the moment accounting reclaims its block.
+
 Prompt handling: prompts are hash-tokenized into their bucket. Completion
 length follows the request's ground-truth ``true_length`` (the forced-length
 protocol, DESIGN.md §3) — the engine generates real tokens, but *when* a
@@ -50,7 +65,7 @@ from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
 from repro.models import transformer as tfm
 from repro.serving.core import PrefillChunk, ServingCore, WallClock
-from repro.serving.kv_cache import BlockAllocator
+from repro.serving.kv_cache import BlockAllocator, prefix_chunk_hashes
 from repro.serving.metrics import LatencyReport, report
 from repro.serving.sampler import SamplerConfig, sample
 
@@ -90,11 +105,19 @@ class RealBackend:
         self.cache = jax.tree.map(
             lambda l: jnp.zeros((max_batch,) + l.shape, l.dtype), row_cache)
 
+        # --- prefix-cache fragment store -------------------------------------
+        # chunk-chain hash -> {"k": (L, block, kvH, D), "v": ...} device K/V of
+        # one content-named block, copied out of a donor lane at prompt
+        # completion; dropped via the allocator's eviction listener
+        self._prefix_store: Dict[int, dict] = {}
+
         # --- instrumentation -------------------------------------------------
         self.prefill_dispatches = 0   # jitted first-chunk forward_seq launches
         self.extend_dispatches = 0    # jitted continuation-chunk launches
         self.prefill_requests = 0     # requests whose prefill completed
         self.prefill_seconds = 0.0    # wall time spent in admission/prefill
+        self.prefix_installs = 0      # lanes seeded from the fragment store
+        self.prefix_tokens_copied = 0  # KV tokens installed instead of computed
 
         # --- jitted programs -------------------------------------------------
         sampler_cfg = sampler
@@ -223,25 +246,42 @@ class RealBackend:
     # -------------------------------------------------------------- protocol
     def attach(self, core: ServingCore) -> None:
         self.core = core
-        if core.prefill_chunk_tokens is not None:
+        if core.prefill_chunk_tokens is not None or core.prefix_caching:
+            # both features run _extend_chunk at non-zero offsets (a cache
+            # hit resumes prefill mid-prompt even with chunking off), so
+            # both need exact attention-family continuation
             if self.cfg.family not in (DENSE, MOE, VLM) or self.cfg.is_encdec:
                 raise ValueError(
-                    f"chunked prefill needs an attention-family model "
-                    f"(got {self.cfg.family}): recurrent families carry "
-                    f"cross-chunk state forward_seq does not externalize")
+                    f"chunked prefill / prefix caching needs an "
+                    f"attention-family model (got {self.cfg.family}): "
+                    f"recurrent families carry cross-chunk state "
+                    f"forward_seq does not externalize")
             if self.cfg.sliding_window or self.prompt_len > self.cache_len:
                 raise ValueError(
-                    "chunked prefill needs an append-buffer cache covering "
-                    "the whole prompt (prompt_len <= cache_len, no sliding "
-                    "window): continuation chunks write at absolute offsets")
-            if core.prefill_chunk_tokens > self.cache_len:
-                raise ValueError(
-                    f"prefill_chunk_tokens={core.prefill_chunk_tokens} "
-                    f"exceeds cache_len={self.cache_len}: a continuation "
-                    f"chunk must fit the cache lane it extends")
+                    "chunked prefill / prefix caching needs an append-buffer "
+                    "cache covering the whole prompt (prompt_len <= "
+                    "cache_len, no sliding window): continuation chunks "
+                    "write at absolute offsets")
+        if (core.prefill_chunk_tokens is not None
+                and core.prefill_chunk_tokens > self.cache_len):
+            raise ValueError(
+                f"prefill_chunk_tokens={core.prefill_chunk_tokens} "
+                f"exceeds cache_len={self.cache_len}: a continuation "
+                f"chunk must fit the cache lane it extends")
+        if core.prefix_caching:
+            # keep the device-side store in lockstep with the accounting:
+            # when the allocator reclaims a cached block, its KV goes too
+            core.allocator.add_evict_listener(
+                lambda h: self._prefix_store.pop(h, None))
 
     def kv_demand(self, req: Request) -> int:
         return self.prompt_len + min(req.true_length, self.cache_len)
+
+    def prefix_tokens(self, req: Request) -> List[int]:
+        """Prefix-sharing stream = the encoded *real* prompt ids (bucket
+        padding is excluded: pad KV depends on where padding starts, so only
+        whole blocks of real tokens are content-addressable)."""
+        return self._prompt_ids(req)
 
     def prefill_total(self, req: Request) -> int:
         """Prompt tokens this engine actually prefills for ``req``: its
@@ -293,24 +333,49 @@ class RealBackend:
             b *= 2
         sizes.append(_next_pow2(self.max_batch))
         chunk = self.core.prefill_chunk_tokens if self.core else None
-        lens = sorted(set(self.bucket_lens()) | ({chunk} if chunk else set()))
-        for bl in lens:
+        # with power-of-two buckets and a power-of-two chunk the planner
+        # only emits continuation chunks of exactly the budget length
+        # (partial takes are head-of-line-only and bucket totals are
+        # multiples of the chunk), so {chunk} is the whole extend grid; a
+        # prefix-cache hit additionally admits at any block-multiple offset,
+        # so its first suffix may be bucket − k·block_size long — warm the
+        # *shortest* of those (bounded: long shared prefix + short unique
+        # tail is the common hit shape, and an unbounded bucket×offset grid
+        # would be O(prompt_len/block) compilations). Longer odd suffixes
+        # lazily compile their length once, like odd chunk remainders.
+        buckets = set(self.bucket_lens())
+        ext_lens = {chunk} if chunk else set()
+        if self.core is not None and self.core.prefix_caching:
+            bs = self.core.allocator.block_size
+            suffixes = sorted(bl - c for bl in buckets
+                              for c in range(bs, bl, bs))
+            ext_lens.update(suffixes[:8])
+        for bl in sorted(buckets | ext_lens):
             for bsz in sizes:
                 tokens = jnp.zeros((bsz, bl), jnp.int32)
                 slots = jnp.zeros((bsz,), jnp.int32)
-                nxt, cache = self._prefill_bucket(self.params, tokens, slots,
-                                                  key)
-                self._place(self.cache, cache, self.slot_tokens, nxt, slots)
-                if chunk and bl == chunk:
-                    # with power-of-two buckets and a power-of-two chunk the
-                    # planner only emits continuation chunks of exactly the
-                    # budget length (partial takes are head-of-line-only and
-                    # bucket totals are multiples of the chunk), so this is
-                    # the whole extend grid; odd configurations lazily
-                    # compile their remainder length once
+                if bl in buckets:
+                    nxt, cache = self._prefill_bucket(self.params, tokens,
+                                                      slots, key)
+                    self._place(self.cache, cache, self.slot_tokens, nxt,
+                                slots)
+                if bl in ext_lens:
                     self._extend_chunk(self.params, self.cache,
                                        self.slot_tokens, tokens, slots,
                                        jnp.zeros((bsz,), bool), key)
+        if self.core is not None and self.core.prefix_caching:
+            # warm the prefix-install ops (fragment concat + lane scatters)
+            # for every block-multiple offset. Scribbling on slot 0 is
+            # harmless: a slot claim always rewrites [0, pos) before use and
+            # attention never reads rows at positions >= pos — the same
+            # masking that makes slot *reuse* safe without zeroing
+            bs = self.core.allocator.block_size
+            blk = self.cache["k"][0, :, 0, :bs]
+            for c in range(bs, max(self.bucket_lens()), bs):
+                k = jnp.concatenate([blk] * (c // bs), axis=1)
+                self.cache["k"] = self.cache["k"].at[0, :, 0, :c].set(k)
+                self.cache["v"] = self.cache["v"].at[0, :, 0, :c].set(k)
+                self.cache["pos"] = self.cache["pos"].at[0].set(0)
         for bsz in sizes:
             out, _ = self._decode_active(self.params, self.cache,
                                          self.slot_tokens,
@@ -335,29 +400,70 @@ class RealBackend:
             return np.asarray(self.slot_tokens)
         return None
 
+    # ------------------------------------------------------- prefix caching
+    def _store_prefix(self, req: Request) -> None:
+        """Copy the completed prompt's content-named per-block K/V slices
+        out of its lane into the fragment store (skipping blocks already
+        stored by an earlier identical prefix, and blocks the allocator
+        isn't tracking — e.g. past the hit cap or with caching off)."""
+        core = self.core
+        if core is None or not core.prefix_caching:
+            return
+        bs = core.allocator.block_size
+        slot = self._slot_of[req.req_id]
+        for i, h in enumerate(prefix_chunk_hashes(self._prompt_ids(req), bs)):
+            if h in self._prefix_store or not core.allocator.tracked(h):
+                continue
+            self._prefix_store[h] = {
+                "k": self.cache["k"][slot, :, 0, i * bs:(i + 1) * bs],
+                "v": self.cache["v"][slot, :, 0, i * bs:(i + 1) * bs]}
+
+    def _install_prefix(self, slot: int, req: Request, n_tokens: int) -> None:
+        """Seed a freshly claimed lane with a cached prefix: write the hit
+        chain's fragments at positions [0, n_tokens) and set the lane's
+        ``pos``, so prefill resumes at the cached offset. The blocks are
+        refcount-pinned by this request's reservation, so every fragment is
+        guaranteed present (commit-before-hit + the eviction listener)."""
+        bs = self.core.allocator.block_size
+        hashes = prefix_chunk_hashes(self._prompt_ids(req), bs)[:n_tokens // bs]
+        frags = [self._prefix_store[h] for h in hashes]
+        k = jnp.concatenate([f["k"] for f in frags], axis=1)
+        v = jnp.concatenate([f["v"] for f in frags], axis=1)
+        self.cache["k"] = self.cache["k"].at[slot, :, 0, :n_tokens].set(k)
+        self.cache["v"] = self.cache["v"].at[slot, :, 0, :n_tokens].set(v)
+        self.cache["pos"] = self.cache["pos"].at[slot].set(n_tokens)
+        self.prefix_installs += 1
+        self.prefix_tokens_copied += n_tokens
+
     def prefill(self, chunks: Sequence[PrefillChunk], now: float) -> float:
         """Execute one step's planned prefill chunks (see ``ServingCore``).
 
         First chunks (``start == 0``) claim a free slot and run the bucketed
         ``_prefill_bucket``/``_place`` path, grouped by chunk length — with
         chunking off every chunk is a whole padded prompt and this *is* the
-        historical one-dispatch-per-bucket admission. Continuation chunks
-        run ``_extend_chunk`` grouped by length; requests at different
-        offsets share a dispatch since the offset is per-lane data. A
-        request whose chunk reaches ``prefill_total`` gets its first output
-        token committed (tokens_done/TTFT bookkeeping preserved across
-        preemption re-admission, matching SimBackend's recompute
-        semantics)."""
+        historical one-dispatch-per-bucket admission. A prefix-cache hit's
+        first chunk arrives with ``start > 0`` and no slot: it claims one,
+        seeds it from the fragment store (``_install_prefix``), and then
+        runs as a continuation. Continuation chunks run ``_extend_chunk``
+        grouped by length; requests at different offsets share a dispatch
+        since the offset is per-lane data. A request whose chunk reaches
+        ``prefill_total`` gets its first output token committed
+        (tokens_done/TTFT bookkeeping preserved across preemption
+        re-admission, matching SimBackend's recompute semantics) and its
+        prefix blocks' KV copied into the fragment store."""
         if not chunks:
             return now
         t0 = time.perf_counter()
         first_groups: Dict[int, list] = {}
         ext_groups: Dict[int, list] = {}
         for req, start, end in chunks:
-            if start == 0:
+            if req.req_id not in self._slot_of:
                 slot = self.slot_req.index(None)
                 self.slot_req[slot] = req
                 self._slot_of[req.req_id] = slot
+                if start > 0:               # admission at a cached offset
+                    self._install_prefix(slot, req, start)
+            if start == 0:
                 first_groups.setdefault(end, []).append(req)
             else:
                 ext_groups.setdefault(end - start, []).append((req, start, end))
@@ -413,6 +519,7 @@ class RealBackend:
             if end < self.prefill_total(req):
                 continue                        # still mid-prompt
             self.prefill_requests += 1
+            self._store_prefix(req)             # prompt KV is now citable
             # recompute semantics on re-admission after preemption: decode
             # progress and TTFT are preserved, matching SimBackend
             if req.tokens_done == 0:
@@ -462,6 +569,7 @@ class Engine:
                  sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
                  bucketed: bool = True,
                  prefill_chunk_tokens: Optional[int] = None,
+                 prefix_caching: bool = False,
                  record_tokens: bool = False,
                  record_token_times: bool = False):
         s = scheduler.max_batch
@@ -475,6 +583,7 @@ class Engine:
         self.core = ServingCore(scheduler, self.backend,
                                 allocator=self.allocator,
                                 prefill_chunk_tokens=prefill_chunk_tokens,
+                                prefix_caching=prefix_caching,
                                 record_token_times=record_token_times)
 
     # -------------------------------------------------------------------- api
@@ -506,14 +615,16 @@ def serve(cfg: ModelConfig, params, requests: Sequence[Request], policy, *,
           starvation_threshold: float = 120.0, time_scale: float = 1.0,
           log_every: float = 0.0, bucketed: bool = True,
           kv_blocks: Optional[int] = None,
-          prefill_chunk_tokens: Optional[int] = None) -> LatencyReport:
+          prefill_chunk_tokens: Optional[int] = None,
+          prefix_caching: bool = False) -> LatencyReport:
     """Convenience wrapper: fresh engine + scheduler, serve, report."""
     sched = Scheduler(policy=policy, max_batch=max_batch,
                       starvation_threshold=starvation_threshold)
     allocator = BlockAllocator(kv_blocks, 16) if kv_blocks else None
     eng = Engine(cfg, params, sched, cache_len=cache_len,
                  prompt_len=prompt_len, allocator=allocator,
-                 bucketed=bucketed, prefill_chunk_tokens=prefill_chunk_tokens)
+                 bucketed=bucketed, prefill_chunk_tokens=prefill_chunk_tokens,
+                 prefix_caching=prefix_caching)
     eng.submit(requests)
     finished = eng.run(time_scale=time_scale, log_every=log_every)
     assert len(finished) == len(requests), (len(finished), len(requests))

@@ -37,6 +37,10 @@ class LatencyReport:
     p99_ttft: float = float("nan")
     p50_itl: float = float("nan")     # median inter-token gap
     p99_itl: float = float("nan")     # tail inter-token gap (HOL stalls)
+    # Prefix caching (NaN when the run had caching disabled — a request only
+    # carries ``cached_prefix_tokens`` once the core looked its prefix up)
+    prefix_hit_rate: float = float("nan")       # share of requests with a hit
+    prefill_tokens_saved: float = float("nan")  # prompt tokens not recomputed
 
     def row(self) -> str:
         return (f"{self.policy:10s} n={self.n_requests:5d} "
@@ -91,6 +95,8 @@ def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
     t0 = min(r.arrival_time for r in finished)
     t1 = max(r.finish_time for r in finished)
     tokens = sum(r.true_length for r in finished)
+    cached = np.asarray([r.cached_prefix_tokens for r in finished
+                         if r.cached_prefix_tokens is not None], dtype=float)
     return LatencyReport(
         policy=policy,
         n_requests=len(finished),
@@ -103,4 +109,7 @@ def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
         p99_ttft=_pct(ttft, 99),
         p50_itl=_pct(itl, 50),
         p99_itl=_pct(itl, 99),
+        prefix_hit_rate=_mean(cached > 0),
+        prefill_tokens_saved=float(cached.sum()) if len(cached)
+        else float("nan"),
     )

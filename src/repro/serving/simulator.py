@@ -34,6 +34,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
+from repro.core.predictor.tokenizer import HashTokenizer
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
 from repro.serving.core import PrefillChunk, ServingCore, VirtualClock
@@ -56,6 +57,11 @@ class SimBackend:
     """Cost-model execution: prefill records the chunked-in tokens, decode
     charges one mixed iteration and advances every prompt-resident request."""
 
+    # same stable word-hash scheme the real engine's HashTokenizer uses, so
+    # textually shared prompt prefixes map to shared token-id prefixes in
+    # both execution modes (cross-backend prefix-hit equivalence is tested)
+    _TOK = HashTokenizer(vocab_size=2048, max_len=1 << 30)
+
     def __init__(self, cost: CostModel = CostModel()) -> None:
         self.cost = cost
         self._prefill_tokens = 0
@@ -72,6 +78,14 @@ class SimBackend:
         # recompute preemption: a re-admitted request re-prefills its prompt
         # plus everything it had already generated (vLLM recompute semantics)
         return req.prompt_len + (req.tokens_done if req.preempt_count else 0)
+
+    def prefix_tokens(self, req: Request) -> Sequence[int]:
+        """Prefix-sharing stream: the prompt's word-hash ids, truncated to
+        the request's declared ``prompt_len`` (the unit the simulator
+        charges prefill in). Prompts with fewer words than ``prompt_len``
+        can only share up to their word count — the synthetic tail is not
+        content, so it is never cached."""
+        return self._TOK.encode(req.prompt)[:req.prompt_len]
 
     def prefill(self, chunks: Sequence[PrefillChunk], now: float) -> float:
         # cost is charged by the decode phase of the same mixed iteration
@@ -101,18 +115,22 @@ def simulate(requests: Sequence[Request], scheduler: Scheduler, *,
              cost: CostModel = CostModel(), max_time: float = 1e7,
              kv_blocks: Optional[int] = None, block_size: int = 16,
              prefill_chunk_tokens: Optional[int] = None,
+             prefix_caching: bool = False,
              record_token_times: bool = False) -> List[Request]:
     """Run to completion; returns the finished requests (with timestamps).
 
     ``kv_blocks`` bounds the KV cache (in ``block_size``-token blocks);
     ``None`` keeps the historical memory-unbounded behaviour.
-    ``prefill_chunk_tokens`` enables mixed prefill/decode iterations
-    (see :class:`~repro.serving.core.ServingCore`)."""
+    ``prefill_chunk_tokens`` enables mixed prefill/decode iterations and
+    ``prefix_caching`` shares KV blocks across common prompt prefixes
+    (see :class:`~repro.serving.core.ServingCore`) — a cache-hit admission
+    only charges the non-shared suffix's prefill tokens."""
     allocator = (BlockAllocator(kv_blocks, block_size) if kv_blocks
                  else BlockAllocator.unbounded(block_size))
     core = ServingCore(scheduler, SimBackend(cost), allocator=allocator,
                        clock=VirtualClock(),
                        prefill_chunk_tokens=prefill_chunk_tokens,
+                       prefix_caching=prefix_caching,
                        record_token_times=record_token_times)
     core.submit(requests)
     return core.run(max_time=max_time)
@@ -122,7 +140,8 @@ def run_policy(requests: Sequence[Request], policy, *, max_batch: int = 16,
                continuous: bool = True, cost: CostModel = CostModel(),
                starvation_threshold: float = 120.0,
                kv_blocks: Optional[int] = None,
-               prefill_chunk_tokens: Optional[int] = None) -> LatencyReport:
+               prefill_chunk_tokens: Optional[int] = None,
+               prefix_caching: bool = False) -> LatencyReport:
     """Convenience: fresh scheduler + simulate + report."""
     # deep-ish copy so one policy run doesn't pollute another
     reqs = [Request(r.req_id, r.prompt, r.arrival_time, r.prompt_len,
@@ -131,6 +150,7 @@ def run_policy(requests: Sequence[Request], policy, *, max_batch: int = 16,
                       continuous=continuous,
                       starvation_threshold=starvation_threshold)
     finished = simulate(reqs, sched, cost=cost, kv_blocks=kv_blocks,
-                        prefill_chunk_tokens=prefill_chunk_tokens)
+                        prefill_chunk_tokens=prefill_chunk_tokens,
+                        prefix_caching=prefix_caching)
     assert len(finished) == len(requests), (len(finished), len(requests))
     return report(policy.name, finished)

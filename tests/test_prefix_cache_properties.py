@@ -1,0 +1,187 @@
+"""Property-based serving-invariant suite for the refcounted prefix cache.
+
+Random admit / extend / shrink / commit / free sequences — with prompts drawn
+from families that share block-aligned prefixes, under a small budget so LRU
+eviction fires constantly — must preserve the allocator's conservation laws
+at every step:
+
+* ``free_blocks + used_blocks == total_blocks``, and the minted ids are
+  exactly partitioned into referenced / cached / recycled;
+* refcounts never go negative (an entry exists iff at least one request
+  holds the block, and equals the number of holders);
+* no block leaks: after every reservation is freed, ``used_blocks == 0``
+  and the full budget is allocatable again;
+* a request never holds blocks after retirement (``reserved == 0`` the
+  moment ``free`` returns, idempotently).
+
+Runs under real ``hypothesis`` when installed — a deterministic, bounded
+"ci" profile is registered and loaded here (override with
+``HYPOTHESIS_PROFILE=<name>``); the tests deliberately carry no
+``@settings`` decorators so the profile actually governs them — and under
+the seeded fallback shim otherwise.
+"""
+import os
+from collections import Counter
+
+from _hypothesis_compat import given, st
+
+from repro.core.scheduler.policies import fcfs
+from repro.core.scheduler.request import Request
+from repro.core.scheduler.scheduler import Scheduler
+from repro.serving import ServingCore, VirtualClock
+from repro.serving.kv_cache import BlockAllocator, prefix_chunk_hashes
+from repro.serving.simulator import CostModel, SimBackend
+
+try:                                   # fixed profile: bounded + derandomized
+    import hypothesis
+
+    hypothesis.settings.register_profile(
+        "ci", max_examples=60, deadline=None, derandomize=True)
+    hypothesis.settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE",
+                                                    "ci"))
+except ModuleNotFoundError:
+    pass
+
+TOTAL, BS = 32, 4
+
+
+def _stream(variant: int, length: int) -> list:
+    """Token stream of one prompt family: variants share a block-aligned
+    prefix of 0/4/8/12 tokens with the common base, then diverge."""
+    shared = (variant % 4) * BS
+    return list(range(shared)) + [1000 + variant * 100 + j
+                                  for j in range(max(length - shared, 0))]
+
+
+def _check_invariants(a: BlockAllocator) -> None:
+    # conservation: every minted id is referenced, cached, or recycled
+    assert a.free_blocks + a.used_blocks == a.total_blocks
+    assert a._minted == a.used_blocks + a.cached_blocks + len(a._free_pool)
+    assert a._minted <= a.total_blocks
+    # refcount = exact holder multiset; never zero or negative entries
+    holders = Counter(b for blocks in a._req_blocks.values() for b in blocks)
+    assert dict(holders) == a._refcount
+    assert all(rc >= 1 for rc in a._refcount.values())
+    # LRU members are exactly the unreferenced committed content blocks
+    for b in a._lru:
+        assert b not in a._refcount
+        assert b in a._block_hash and b in a._committed
+    # hash index stays a bijection
+    assert len(a._hash_block) == len(a._block_hash)
+    for b, h in a._block_hash.items():
+        assert a._hash_block[h] == b
+    # the free pool is disjoint from live and cached blocks
+    assert set(a._free_pool).isdisjoint(a._refcount)
+    assert set(a._free_pool).isdisjoint(a._lru)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=1 << 20),
+                min_size=1, max_size=150))
+def test_random_lifecycle_preserves_invariants(codes):
+    a = BlockAllocator(total_blocks=TOTAL, block_size=BS)
+    evicted = []
+
+    def on_evict(h):
+        # the index entry is dropped *before* listeners run — a backend can
+        # never observe a tracked hash it was just told to forget (the same
+        # content may be re-registered by a later identical prompt, so this
+        # only holds at notification time)
+        assert not a.tracked(h)
+        evicted.append(h)
+
+    a.add_evict_listener(on_evict)
+    live, next_id = {}, 0
+    for code in codes:
+        op = code % 4
+        if op == 0:                                    # admit
+            variant, tokens = (code >> 2) % 6, 4 + (code >> 5) % 40
+            ids = _stream(variant, tokens)
+            hashes = prefix_chunk_hashes(ids, BS)[:max(tokens - 1, 0) // BS]
+            if a.can_allocate(tokens, hashes):
+                shared = a.allocate(next_id, tokens, hashes)
+                assert 0 <= shared <= len(hashes)
+                assert a.reserved(next_id) == a.blocks_for(tokens)
+                live[next_id] = tokens
+                next_id += 1
+        elif op == 1 and live:                         # grow / shrink
+            rid = sorted(live)[(code >> 2) % len(live)]
+            tokens = 4 + (code >> 5) % 60
+            before = a.reserved(rid)
+            if a.extend(rid, tokens):
+                assert a.reserved(rid) == a.blocks_for(tokens)
+                live[rid] = tokens
+            else:                                      # denied: state intact
+                assert a.reserved(rid) == before
+        elif op == 2 and live:                         # prefill completed
+            a.commit(sorted(live)[(code >> 2) % len(live)])
+        elif op == 3 and live:                         # retire
+            rid = sorted(live)[(code >> 2) % len(live)]
+            a.free(rid)
+            del live[rid]
+            assert a.reserved(rid) == 0                # nothing held after
+            a.free(rid)                                # idempotent
+            assert a.reserved(rid) == 0
+        _check_invariants(a)
+    for rid in list(live):                             # drain: no leaks
+        a.free(rid)
+        assert a.reserved(rid) == 0
+    _check_invariants(a)
+    assert a.used_blocks == 0
+    assert a.free_blocks == a.total_blocks
+    assert a.can_allocate(TOTAL * BS)                  # full budget reusable
+
+
+@given(st.lists(st.integers(min_value=0, max_value=1 << 20),
+                min_size=2, max_size=40))
+def test_mirror_store_tracks_eviction_listener(codes):
+    """A backend-style hash-keyed mirror (fragment store) kept via the
+    eviction listener never holds content the allocator stopped tracking."""
+    a = BlockAllocator(total_blocks=8, block_size=BS)
+    mirror = set()
+    a.add_evict_listener(mirror.discard)
+    rid = 0
+    for code in codes:
+        variant, tokens = code % 5, 4 + (code >> 3) % 24
+        hashes = prefix_chunk_hashes(_stream(variant, tokens), BS)
+        hashes = hashes[:max(tokens - 1, 0) // BS]
+        if a.can_allocate(tokens, hashes):
+            a.allocate(rid, tokens, hashes)
+            a.commit(rid)
+            mirror.update(h for h in hashes if a.tracked(h))
+            if code % 2:                               # retire half of them
+                a.free(rid)
+            rid += 1
+        assert all(a.tracked(h) for h in mirror)
+    for r in range(rid):
+        a.free(r)
+    # flush the LRU under pressure: the mirror must drain with it
+    a.allocate(10**6, a.total_blocks * BS)
+    assert mirror == set()
+
+
+@given(n=st.integers(min_value=2, max_value=10),
+       shared_words=st.integers(min_value=0, max_value=48),
+       budget=st.integers(min_value=8, max_value=40),
+       chunk=st.integers(min_value=8, max_value=64))
+def test_served_workloads_release_every_block(n, shared_words, budget, chunk):
+    """End-to-end through the ServingCore: a randomized shared-prefix
+    workload under a tight budget (chunked prefill + caching on) finishes
+    with the allocator clean — no request holds blocks after retirement."""
+    prefix = " ".join(f"sys{i}" for i in range(shared_words))
+    reqs = [Request(i, f"{prefix} tail{i} " +
+                    " ".join(f"u{i}w{j}" for j in range(12)),
+                    0.3 * i, 8 + 4 * (i % 5), 1 + (i % 4)) for i in range(n)]
+    alloc = BlockAllocator(total_blocks=budget, block_size=16)
+    sched = Scheduler(policy=fcfs(), max_batch=4)
+    core = ServingCore(sched, SimBackend(CostModel()), allocator=alloc,
+                       clock=VirtualClock(), prefill_chunk_tokens=chunk,
+                       prefix_caching=True)
+    core.submit(reqs)
+    finished = core.run()
+    assert len(finished) == n
+    assert alloc.used_blocks == 0
+    assert alloc.free_blocks == alloc.total_blocks
+    for r in finished:
+        assert alloc.reserved(r.req_id) == 0
+        assert r.cached_prefix_tokens is not None      # caching was consulted
+    _check_invariants(alloc)

@@ -1,0 +1,309 @@
+"""Refcounted prefix caching through the ServingCore.
+
+Covers the allocator's sharing/commit/LRU semantics, the simulator's
+suffix-only prefill charging (the TTFT win on shared-system-prompt traffic),
+NaN-safe metrics, the shared-aware no-progress ``MemoryError`` accounting,
+cross-backend equivalence of admission order and per-request hit decisions,
+and the acceptance bar: real-engine greedy outputs are **bit-identical**
+with caching on vs off.
+"""
+import math
+
+import jax
+import pytest
+
+from repro.core.scheduler.policies import fcfs, oracle_sjf
+from repro.core.scheduler.request import Request
+from repro.core.scheduler.scheduler import Scheduler
+from repro.serving import BlockAllocator, prefix_chunk_hashes
+from repro.serving.metrics import report
+from repro.serving.simulator import CostModel, simulate
+
+
+def _cost():
+    return CostModel(iter_base_s=0.01, per_seq_s=0.0,
+                     prefill_per_token_s=0.001)
+
+
+def _words(n, tag=""):
+    return " ".join(f"{tag}w{j}" for j in range(n))
+
+
+# ----------------------------------------------------------- allocator units
+def test_committed_prefix_blocks_are_shared():
+    a = BlockAllocator(total_blocks=16, block_size=16)
+    hashes = prefix_chunk_hashes(list(range(64)), 16)          # 4 full chunks
+    assert a.allocate(1, 80, hashes) == 0                      # cold miss
+    assert a.used_blocks == 5
+    a.commit(1)
+    assert a.allocate(2, 80, hashes) == 4                      # share all 4
+    assert a.used_blocks == 6                                  # 5 + 1 new
+    assert a.reserved(1) == a.reserved(2) == 5
+    a.free(1)
+    assert a.used_blocks == 5                                  # still pinned
+    a.free(2)
+    assert a.used_blocks == 0
+    assert a.cached_blocks == 4                                # parked in LRU
+    assert a.free_blocks == 16                                 # and reusable
+
+
+def test_uncommitted_prefixes_never_hit():
+    a = BlockAllocator(total_blocks=16, block_size=16)
+    hashes = prefix_chunk_hashes(list(range(32)), 16)
+    a.allocate(1, 48, hashes)
+    assert a.cached_prefix_blocks(hashes) == 0                 # mid-prefill
+    assert a.allocate(2, 48, hashes) == 0                      # concurrent dup
+    a.commit(1)
+    assert a.cached_prefix_blocks(hashes) == 2
+    # the duplicate's anonymous blocks recycle; the owner's park in the LRU
+    a.free(2)
+    assert a.cached_blocks == 0
+    a.free(1)
+    assert a.cached_blocks == 2
+
+
+def test_lru_eviction_is_oldest_first_and_notifies():
+    a = BlockAllocator(total_blocks=4, block_size=16)
+    evicted = []
+    a.add_evict_listener(evicted.append)
+    h1 = prefix_chunk_hashes([1] * 16, 16)
+    h2 = prefix_chunk_hashes([2] * 16, 16)
+    a.allocate(1, 16, h1), a.commit(1), a.free(1)              # older content
+    a.allocate(2, 16, h2), a.commit(2), a.free(2)              # newer content
+    assert a.cached_blocks == 2 and a.free_blocks == 4
+    a.allocate(3, 48)                  # 3 blocks: mint 2, evict exactly one
+    assert evicted == h1                                       # oldest first
+    assert a.cached_prefix_blocks(h2) == 1                     # newer survives
+    a.free(3)
+    a.allocate(4, 64)                                          # full pressure
+    assert evicted == h1 + h2 and a.cached_blocks == 0
+
+
+# ------------------------------------------------------------- sim behaviour
+def _shared_reqs(n=8, shared_words=1024, unique_words=63, plen=1088, tlen=32,
+                 gap=1.0):
+    """A shared-system-prompt stream: arrivals spaced so each prompt's
+    prefill commits before the next request is admitted."""
+    prefix = _words(shared_words, "sys")
+    return [Request(i, prefix + " " + _words(unique_words, f"u{i}"),
+                    i * gap, plen, tlen) for i in range(n)]
+
+
+def test_sim_shared_prefix_cuts_ttft_and_charges_suffix_only():
+    cold = simulate(_shared_reqs(), Scheduler(policy=fcfs(), max_batch=8),
+                    cost=_cost())
+    warm = simulate(_shared_reqs(), Scheduler(policy=fcfs(), max_batch=8),
+                    cost=_cost(), prefix_caching=True)
+    # the first request is the cold miss that populates the cache
+    first = min(warm, key=lambda r: r.arrival_time)
+    assert first.cached_prefix_tokens == 0
+    hits = [r for r in warm if r is not first]
+    assert all(r.cached_prefix_tokens == 1024 for r in hits)   # whole prefix
+    ttft = {id(run): [r.first_token_time - r.arrival_time for r in run
+                      if r is not min(run, key=lambda q: q.arrival_time)]
+            for run in (cold, warm)}
+    mean = lambda xs: sum(xs) / len(xs)                        # noqa: E731
+    assert mean(ttft[id(warm)]) * 2 < mean(ttft[id(cold)])     # >= 2x better
+    assert all(r.tokens_done == r.true_length for r in warm)   # nobody cheated
+
+
+def test_hit_is_capped_before_the_last_prompt_token():
+    """A fully cached prompt still recomputes its final position — the
+    backend needs those logits to emit the first output token."""
+    reqs = [Request(0, _words(40, "s"), 0.0, 32, 4),
+            Request(1, _words(40, "s"), 5.0, 32, 4)]           # identical
+    fin = {r.req_id: r for r in simulate(
+        reqs, Scheduler(policy=fcfs(), max_batch=2), cost=_cost(),
+        prefix_caching=True)}
+    assert fin[1].cached_prefix_tokens == 16                   # not 32
+    assert fin[1].tokens_done == 4
+
+
+def test_prefix_cache_survives_retirement_and_feeds_preemption_recompute():
+    """Committed prompt blocks park in the LRU at retirement (a much later
+    identical prompt still hits), and a preemption victim's recompute
+    re-prefill hits its *own* committed prefix on re-admission."""
+    late = [Request(0, _words(80, "s"), 0.0, 64, 2),
+            Request(1, _words(80, "s"), 50.0, 64, 2)]          # long idle gap
+    fin = {r.req_id: r for r in simulate(
+        late, Scheduler(policy=fcfs(), max_batch=2), cost=_cost(),
+        prefix_caching=True)}
+    assert fin[1].cached_prefix_tokens == 48                   # capped 64-16
+
+    reqs = [Request(0, _words(80, "long"), 0.0, 64, 30),
+            Request(1, "short one", 0.2, 8, 2)]
+    sched = Scheduler(policy=oracle_sjf(), max_batch=1, preemption=True)
+    fin = {r.req_id: r for r in simulate(reqs, sched, cost=_cost(),
+                                         prefix_caching=True)}
+    assert fin[0].preempt_count >= 1
+    assert fin[0].cached_prefix_tokens > 0      # recompute reused own prefix
+    assert fin[0].tokens_done == 30
+
+
+# ------------------------------------------------ KV-budget accounting fixes
+def test_sharing_admits_within_budget_full_demand_exceeds():
+    """B's solo demand is 7 blocks but only 4 are free while A runs; the 3
+    cached-prefix blocks it shares with A close the gap — without caching it
+    must wait for A to retire."""
+    def reqs():
+        return [Request(0, _words(80, "s"), 0.0, 64, 16),      # 5 blocks
+                Request(1, _words(80, "s"), 0.2, 64, 48)]      # 7 blocks
+    kw = dict(cost=_cost(), kv_blocks=9)
+    cold = {r.req_id: r for r in simulate(
+        reqs(), Scheduler(policy=fcfs(), max_batch=2), **kw)}
+    warm = {r.req_id: r for r in simulate(
+        reqs(), Scheduler(policy=fcfs(), max_batch=2), prefix_caching=True,
+        **kw)}
+    assert cold[1].start_time >= cold[0].finish_time           # deferred
+    assert warm[1].start_time < warm[0].finish_time            # co-resident
+    assert warm[1].cached_prefix_tokens == 48
+
+
+def test_no_progress_memory_error_reports_effective_demand():
+    """Regression for the no-progress path: the message must account for
+    cached-prefix reservations instead of assuming full-prompt demand."""
+    reqs = [Request(0, _words(80, "s"), 0.0, 64, 16),          # fits: 5 of 5
+            Request(1, _words(80, "s"), 10.0, 64, 48)]         # 7 > 5, ever
+    with pytest.raises(MemoryError, match=r"request 1 .* 112 tokens = 7 "
+                                          r"blocks of 16 \(3 reusable from "
+                                          r"the prefix cache\), .* 5 blocks"):
+        simulate(reqs, Scheduler(policy=fcfs(), max_batch=2), cost=_cost(),
+                 kv_blocks=5, prefix_caching=True)
+
+
+# ----------------------------------------------------------- metrics report
+def test_metrics_nan_safe_when_caching_disabled():
+    reqs = _shared_reqs(n=4)
+    off = report("fcfs", simulate(reqs, Scheduler(policy=fcfs(), max_batch=4),
+                                  cost=_cost()))
+    assert math.isnan(off.prefix_hit_rate)
+    assert math.isnan(off.prefill_tokens_saved)
+    on = report("fcfs", simulate(_shared_reqs(n=4),
+                                 Scheduler(policy=fcfs(), max_batch=4),
+                                 cost=_cost(), prefix_caching=True))
+    assert on.prefix_hit_rate == pytest.approx(3 / 4)          # 1 cold miss
+    assert on.prefill_tokens_saved == pytest.approx(3 * 1024)
+
+
+def test_metrics_zero_hits_is_zero_not_nan():
+    """Caching on but nothing shareable: 0% is a real measurement."""
+    reqs = [Request(i, _words(40, f"solo{i}"), i * 1.0, 32, 4)
+            for i in range(3)]
+    rep = report("fcfs", simulate(reqs, Scheduler(policy=fcfs(), max_batch=4),
+                                  cost=_cost(), prefix_caching=True))
+    assert rep.prefix_hit_rate == 0.0
+    assert rep.prefill_tokens_saved == 0.0
+
+
+# -------------------------------------------------- real engine + equivalence
+@pytest.fixture(scope="module")
+def real_engine_setup():
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tfm
+
+    cfg = get_smoke_config("llama3_2_3b").replace(dtype="float32",
+                                                  vocab_size=2048)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _two_phase_real_run(cfg, params, caching, *, chunk=None):
+    """Donor first (populates the cache), then three shared-prefix
+    recipients — two-phase submits make the hit pattern deterministic
+    without wall-clock arrival races."""
+    from repro.serving.engine import Engine
+
+    shared = _words(40, "sys")
+    eng = Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=4),
+                 cache_len=128, prompt_len=64, prefix_caching=caching,
+                 prefill_chunk_tokens=chunk, record_tokens=True)
+    eng.submit([Request(0, shared + " donor tail", 0.0, 49, 4)])
+    eng.run()
+    eng.submit([Request(10 + i, shared + " " + _words(8, f"u{i}"), 0.0, 49,
+                        4 + i) for i in range(3)])
+    eng.run()
+    assert len(eng.finished) == 4
+    assert eng.allocator.used_blocks == 0          # everything released
+    return eng
+
+
+def test_real_engine_outputs_bit_identical_with_prefix_caching(
+        real_engine_setup):
+    """Acceptance: greedy outputs with caching on equal caching off
+    token-for-token on a shared-prefix workload, while the hit path really
+    ran (lanes were seeded from the fragment store, not recomputed)."""
+    cfg, params = real_engine_setup
+    runs = {c: _two_phase_real_run(cfg, params, c) for c in (False, True)}
+    outs = {c: {r.req_id: r.generated_tokens for r in eng.finished}
+            for c, eng in runs.items()}
+    assert outs[True] == outs[False]
+    on = runs[True]
+    assert on.backend.prefix_installs == 3
+    # 40 shared words -> 41 shared ids (CLS included) -> 2 full blocks
+    assert on.backend.prefix_tokens_copied == 3 * 32
+    assert {r.req_id: r.cached_prefix_tokens for r in on.finished} == {
+        0: 0, 10: 32, 11: 32, 12: 32}
+    off = runs[False]
+    assert off.backend.prefix_installs == 0
+    assert all(r.cached_prefix_tokens is None for r in off.finished)
+
+
+def test_real_engine_prefix_caching_composes_with_chunked_prefill(
+        real_engine_setup):
+    """A cache-hit admission under a chunk budget streams only the suffix,
+    and still matches the uncached, unchunked outputs exactly."""
+    cfg, params = real_engine_setup
+    base = _two_phase_real_run(cfg, params, False)
+    both = _two_phase_real_run(cfg, params, True, chunk=16)
+    assert ({r.req_id: r.generated_tokens for r in both.finished}
+            == {r.req_id: r.generated_tokens for r in base.finished})
+    assert both.backend.prefix_installs == 3
+    assert both.backend.extend_dispatches > 0
+
+
+def test_real_engine_rejects_prefix_caching_for_recurrent_families():
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tfm
+    from repro.serving.engine import Engine
+
+    cfg = get_smoke_config("rwkv6_7b").replace(dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="attention-family"):
+        Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=2),
+               cache_len=64, prompt_len=16, prefix_caching=True)
+
+
+def test_cross_backend_admission_order_and_hit_decisions_match(
+        real_engine_setup):
+    """The same seeded shared-prefix workload, served by the simulator and
+    the real engine, admits in the same order and makes identical
+    per-request prefix-hit decisions — cache on and cache off."""
+    from repro.serving.engine import Engine
+
+    shared = _words(20, "sys")                    # 21 shared ids -> 1 block
+
+    def reqs():
+        return [Request(i, shared + " " + _words(20, f"u{i}"), 0.4 * i, 32, 3)
+                for i in range(5)]
+
+    for caching in (False, True):
+        fin_sim = simulate(reqs(), Scheduler(policy=fcfs(), max_batch=2),
+                           cost=_cost(), prefix_caching=caching)
+        cfg, params = real_engine_setup
+        eng = Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=2),
+                     cache_len=64, prompt_len=32, prefix_caching=caching)
+        eng.warmup()
+        eng.submit(reqs())
+        fin_real = eng.run()
+
+        def order(fin):
+            return [r.req_id for r in
+                    sorted(fin, key=lambda r: (r.start_time, r.req_id))]
+
+        def hits(fin):
+            return {r.req_id: r.cached_prefix_tokens for r in fin}
+
+        assert order(fin_sim) == order(fin_real)
+        assert hits(fin_sim) == hits(fin_real)
+        if caching:
+            assert sum(1 for v in hits(fin_sim).values() if v) == 4
