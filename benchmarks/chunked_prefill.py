@@ -25,7 +25,7 @@ import json
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, record_serving_bench
 from repro.core.scheduler.policies import fcfs
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
@@ -185,6 +185,15 @@ def main(argv=None) -> dict:
         emit(f"chunked_prefill_{mode}", res["chunked"]["itl_p99_s"] * 1e6,
              f"p99 ITL {speedup:.1f}x lower than unchunked "
              f"(chunk={res['chunk_tokens']})")
+    if "sim" in results:
+        s = results["sim"]
+        record_serving_bench("chunked_prefill", {
+            "p99_itl_speedup": s["unchunked"]["itl_p99_s"]
+            / s["chunked"]["itl_p99_s"],
+            "chunked_p99_itl_s": s["chunked"]["itl_p99_s"],
+            "unchunked_p99_itl_s": s["unchunked"]["itl_p99_s"],
+            "chunk_tokens": s["chunk_tokens"],
+        })
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)

@@ -10,9 +10,11 @@ paper-scale protocol (5 epochs etc.). Sizes are recorded in every output row.
 from __future__ import annotations
 
 import functools
+import json
 import os
 import time
 from dataclasses import dataclass
+from pathlib import Path
 
 import numpy as np
 
@@ -81,3 +83,19 @@ def tau_of(pred, dataset: str, model: str) -> float:
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """The repo-wide CSV row convention: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+BENCH_SERVING_JSON = Path(__file__).resolve().parent.parent / \
+    "BENCH_serving.json"
+
+
+def record_serving_bench(section: str, payload: dict,
+                         path: Path = BENCH_SERVING_JSON) -> None:
+    """Merge one serving benchmark's headline numbers into the repo-root
+    consolidated ``BENCH_serving.json`` (created on first write, sections
+    keyed by benchmark name so re-runs overwrite their own entry only)."""
+    data = {}
+    if path.exists():
+        data = json.loads(path.read_text())
+    data[section] = payload
+    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")

@@ -28,7 +28,7 @@ import json
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, record_serving_bench
 from repro.core.scheduler.policies import fcfs
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
@@ -187,6 +187,15 @@ def main(argv=None) -> dict:
                        f"(hit_rate={res['cached']['prefix_hit_rate']:.2f})")
         emit(f"prefix_caching_{mode}", res["cached"]["ttft_mean_warm_s"] * 1e6,
              derived)
+    if "sim" in results:
+        s = results["sim"]
+        record_serving_bench("prefix_caching", {
+            "warm_ttft_speedup": s["warm_ttft_speedup"],
+            "cached_warm_ttft_s": s["cached"]["ttft_mean_warm_s"],
+            "uncached_warm_ttft_s": s["uncached"]["ttft_mean_warm_s"],
+            "hit_rate": s["cached"]["prefix_hit_rate"],
+            "prefill_tokens_saved": s["cached"]["prefill_tokens_saved"],
+        })
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)

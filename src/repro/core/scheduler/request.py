@@ -45,6 +45,14 @@ class Request:
     cached_prefix_tokens: Optional[int] = None
     boosted: bool = False                     # starvation-prevention flag
     preempt_count: int = 0                    # recompute-preemption evictions
+    # Incremental KV reservation (``kv_reservation="incremental"`` on the
+    # serving core): decode-time block-``grow`` denials charged while *this*
+    # request was trying to take its next decode step, and the number of
+    # times this request was preempted to free blocks for another request's
+    # grow. ``None`` means the run reserved full demand at admission — the
+    # metrics layer reports NaN instead of a misleading 0.
+    grow_failures: Optional[int] = None
+    grow_preemptions: Optional[int] = None
     # Per-token completion timestamps (only filled when the serving core is
     # created with ``record_token_times=True``): one entry per generated
     # token, so inter-token-latency percentiles can be computed from actual

@@ -1,8 +1,10 @@
-"""Pure-jnp oracle for the flash_decode kernel."""
+"""Pure-jnp oracles for the flash_decode kernels (contiguous and paged)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import NEG_INF
 
 
 def flash_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
@@ -15,3 +17,24 @@ def flash_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgw,bhwd->bhgd", p, v_cache.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def flash_decode_paged_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           block_tables: jax.Array, lengths: jax.Array,
+                           ) -> jax.Array:
+    """Oracle for ``flash_decode_paged``: materialize each sequence's lane by
+    gathering its table's blocks out of the pool, mask rows past the
+    sequence length, and run the dense reference.
+
+    q: (B, KH, G, dh); pools: (num_blocks, KH, block_size, dh);
+    block_tables: (B, max_blocks); lengths: (B,).
+    """
+    b, kh, g, dh = q.shape
+    bs = k_pool.shape[2]
+    max_blocks = block_tables.shape[1]
+    # (B, max_blocks, KH, bs, dh) -> (B, KH, max_blocks*bs, dh)
+    k = jnp.moveaxis(k_pool[block_tables], 2, 1).reshape(b, kh, -1, dh)
+    v = jnp.moveaxis(v_pool[block_tables], 2, 1).reshape(b, kh, -1, dh)
+    pos = jnp.arange(max_blocks * bs)
+    bias = jnp.where(pos[None, :] < lengths[:, None], 0.0, NEG_INF)
+    return flash_decode_ref(q, k, v, bias.astype(jnp.float32))

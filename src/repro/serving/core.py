@@ -52,9 +52,10 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Protocol, Sequence, Tuple
+from typing import (Callable, Deque, Dict, List, Optional, Protocol, Sequence,
+                    Tuple)
 
-from repro.core.scheduler.request import Request
+from repro.core.scheduler.request import Request, RequestState
 from repro.core.scheduler.scheduler import Scheduler
 from repro.serving.kv_cache import BlockAllocator, prefix_chunk_hashes
 
@@ -160,6 +161,19 @@ class ServingCore:
     a common prefix (see module docstring). Off by default: caching changes
     which blocks admissions reserve, so the historical behaviour is opted
     into, never silently altered.
+
+    ``kv_reservation`` — ``"full"`` (default, historical) reserves a
+    request's worst-case ``backend.kv_demand`` at admission; a resident
+    request can never stall on memory, but admission is gated on KV the
+    request may not need for thousands of steps. ``"incremental"``
+    (vLLM-style paged admission) reserves only the prompt plus one decode
+    block up front and grows the reservation block-by-block as decode
+    advances (:meth:`_grow_for_decode`) — admitted concurrency at a fixed
+    KV budget rises accordingly. When a grow is denied, the lowest-ranked
+    other running request is preempted (deterministic: scheduler policy
+    key, then req_id; recompute semantics, counted in
+    ``Request.grow_preemptions``) so half-decoded requests cannot deadlock
+    waiting on each other.
     """
 
     def __init__(self, scheduler: Scheduler, backend: ExecutionBackend, *,
@@ -167,9 +181,13 @@ class ServingCore:
                  clock: Optional[Clock] = None,
                  prefill_chunk_tokens: Optional[int] = None,
                  record_token_times: bool = False,
-                 prefix_caching: bool = False) -> None:
+                 prefix_caching: bool = False,
+                 kv_reservation: str = "full") -> None:
         if prefill_chunk_tokens is not None and prefill_chunk_tokens <= 0:
             raise ValueError("prefill_chunk_tokens must be positive or None")
+        if kv_reservation not in ("full", "incremental"):
+            raise ValueError(f"kv_reservation must be 'full' or "
+                             f"'incremental', got {kv_reservation!r}")
         self.scheduler = scheduler
         self.backend = backend
         self.allocator = allocator or BlockAllocator.unbounded()
@@ -177,6 +195,7 @@ class ServingCore:
         self.prefill_chunk_tokens = prefill_chunk_tokens
         self.record_token_times = record_token_times
         self.prefix_caching = prefix_caching
+        self.kv_reservation = kv_reservation
         # req_id -> full chunk-hash chain, computed once per residency: the
         # KV gate re-evaluates every waiting request each cycle under
         # back-pressure, and re-tokenizing + re-hashing a long shared prompt
@@ -221,21 +240,39 @@ class ServingCore:
         cap = max(self._target(req) - 1, 0) // self.allocator.block_size
         return chain[:cap]
 
+    def _admission_need(self, req: Request) -> int:
+        """KV tokens an admission must reserve. Full mode: the backend's
+        worst-case demand. Incremental mode: the prompt (``prefill_target``)
+        plus one decode block — decode growth is paid step-by-step."""
+        need = self.backend.kv_demand(req)
+        if self.kv_reservation == "incremental":
+            need = min(self._target(req) + self.allocator.block_size, need)
+        return need
+
     # ---------------------------------------------------------------- hooks
     def _reserve(self, req: Request) -> bool:
         """Scheduler admission gate: reserve KV blocks or keep the request
         in W (memory back-pressure, identical in both execution modes).
 
-        The *full* demand is reserved up front even under chunked prefill —
-        a half-prefilled request must never deadlock waiting for blocks its
-        own decode phase needs. With prefix caching, the leading blocks
-        that match a committed cached chain are shared rather than newly
-        claimed, and the request starts prefill at the cached offset."""
-        need = self.backend.kv_demand(req)
+        Under ``kv_reservation="full"`` the *full* demand is reserved up
+        front even under chunked prefill — a half-prefilled request can
+        never stall on blocks its own decode phase needs. Under
+        ``"incremental"`` only the prompt + first decode block is reserved
+        (``_grow_for_decode`` pays for the rest). With prefix caching, the
+        leading blocks that match a committed cached chain are shared
+        rather than newly claimed, and the request starts prefill at the
+        cached offset."""
+        need = self._admission_need(req)
         hashes = self._prefix_hashes(req)
         if not self.allocator.can_allocate(need, hashes):
             return False
         shared = self.allocator.allocate(req.req_id, need, hashes)
+        if self.kv_reservation == "incremental":
+            # None → 0 marks "incremental accounting active" (metrics stay
+            # NaN-safe for full-reservation runs); preserved across
+            # preemption re-admissions like ``cached_prefix_tokens``
+            req.grow_failures = req.grow_failures or 0
+            req.grow_preemptions = req.grow_preemptions or 0
         if self.prefix_caching:
             cached = shared * self.allocator.block_size
             if cached:
@@ -298,6 +335,63 @@ class ServingCore:
             budget -= take
         return chunks
 
+    # ------------------------------------------------- incremental reservation
+    def _grow_victim(self, req: Request) -> Optional[Request]:
+        """Deterministic preemption fallback for a denied decode-time grow:
+        the lowest-ranked *other* running request still holding blocks —
+        non-boosted before boosted, then worst policy key, req_id as the
+        final tiebreak so both execution modes pick the same victim."""
+        pool = [v for v in self.scheduler.running
+                if v is not req and self.allocator.reserved(v.req_id)]
+        if not pool:
+            return None
+        return max(pool, key=lambda v: (not v.boosted,
+                                        self.scheduler.policy.key(v),
+                                        v.req_id))
+
+    def _preempt_for_grow(self, victim: Request) -> None:
+        """Evict ``victim`` back to W with recompute semantics (mirrors
+        ``Scheduler._preempt``: partial KV residency is lost, re-admission
+        re-prefills from offset 0 and re-snapshots the prefill target)."""
+        self.scheduler.running.remove(victim)
+        victim.state = RequestState.WAITING
+        victim.preempt_count += 1
+        victim.grow_preemptions = (victim.grow_preemptions or 0) + 1
+        victim.prefilled_tokens = 0
+        victim.prefill_target = None
+        self._evict(victim)
+        self.scheduler.waiting.append(victim)
+
+    def _grow_for_decode(self) -> None:
+        """Incremental mode: before a decode iteration, grow every
+        decode-ready request's reservation to cover the KV row the next
+        token writes (``prefill_target + tokens_done + 1`` tokens, capped
+        at the backend's full demand — one new block every
+        ``block_size`` steps). A denied grow preempts the lowest-ranked
+        other running request and retries; a request that cannot be grown
+        even with the batch to itself can never finish, which is a genuine
+        capacity error, not back-pressure."""
+        for r in list(self.scheduler.running):
+            if r.state is not RequestState.RUNNING or not self.decode_ready(r):
+                continue
+            need = min(self._target(r) + r.tokens_done + 1,
+                       self.backend.kv_demand(r))
+            while True:
+                delta = (self.allocator.blocks_for(need)
+                         - self.allocator.reserved(r.req_id))
+                if delta <= 0 or self.allocator.grow(r.req_id, delta):
+                    break
+                r.grow_failures = (r.grow_failures or 0) + 1
+                victim = self._grow_victim(r)
+                if victim is None:
+                    raise MemoryError(
+                        f"KV budget cannot sustain request {r.req_id} even "
+                        f"alone: needs {self.allocator.blocks_for(need)} "
+                        f"blocks of {self.allocator.block_size}, cache has "
+                        f"{self.allocator.total_blocks} "
+                        f"({self.allocator.free_blocks} free)")
+                self._preempt_for_grow(victim)
+
     def step(self, now: float) -> float:
         """One mixed serving cycle: admit → prefill ≤ chunk tokens → one
         decode token for every fully prefilled running request → retire."""
@@ -314,13 +408,22 @@ class ServingCore:
                     self.allocator.commit(req.req_id)
             self._retire(now)            # true_length == 1 finishes at prefill
         if self.scheduler.running:
-            now = self.backend.decode(now)
+            if self.kv_reservation == "incremental":
+                self._grow_for_decode()
+            if self.scheduler.running:   # grow preemption may have drained R
+                now = self.backend.decode(now)
             self._retire(now)
         return now
 
     def run(self, *, max_time: float = float("inf"), log_every: float = 0.0,
-            log_fn=print) -> List[Request]:
-        """Serve everything submitted; returns the finished requests."""
+            log_fn=print,
+            on_step: Optional[Callable[["ServingCore", float], None]] = None,
+            ) -> List[Request]:
+        """Serve everything submitted; returns the finished requests.
+
+        ``on_step(core, now)`` fires after every serving cycle — benchmark
+        probes sample batch occupancy / allocator state through it without
+        patching the loop."""
         last_log = 0.0
         total = len(self._pending) + len(self.finished) + \
             len(self.scheduler.waiting) + len(self.scheduler.running)
@@ -339,6 +442,8 @@ class ServingCore:
             running_before = bool(self.scheduler.running)
             finished_before = len(self.finished)
             new_now = self.step(now)
+            if on_step is not None:
+                on_step(self, new_now)
             progressed = (new_now != now or running_before
                           or self.scheduler.running
                           or len(self.finished) > finished_before)
@@ -353,11 +458,11 @@ class ServingCore:
                 # the smallest *non-shared* footprint, not the smallest
                 # prompt (its full demand may exceed what admission needs)
                 def _new_blocks(r: Request) -> int:
-                    return (self.allocator.blocks_for(self.backend.kv_demand(r))
+                    return (self.allocator.blocks_for(self._admission_need(r))
                             - self.allocator.cached_prefix_blocks(
                                 self._prefix_hashes(r)))
                 smallest = min(self.scheduler.waiting, key=_new_blocks)
-                tokens = self.backend.kv_demand(smallest)
+                tokens = self._admission_need(smallest)
                 shared = self.allocator.cached_prefix_blocks(
                     self._prefix_hashes(smallest))
                 cached_note = (f" ({shared} reusable from the prefix cache)"

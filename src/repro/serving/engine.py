@@ -29,17 +29,32 @@ attention-family model (DENSE/MoE/VLM) and an append-buffer cache
 (``prompt_len <= cache_len``, no sliding window); recurrent families carry
 cross-chunk state that ``forward_seq`` does not externalize.
 
+**Paged KV** (``paged`` on :class:`Engine` / :func:`serve`; auto-on for
+attention-family, non-enc-dec, non-sliding-window models): KV lives in one
+global block pool ``(total_blocks + 1, L, block_size, KH, dh)`` per K and V
+instead of per-slot lanes, indexed by each request's allocator block table
+(plus a trailing *null* block that absorbs padded-table writes and whose
+reads are always masked). Dispatches gather a request's table into a
+contiguous lane, run the same forward/decode math as contiguous mode — rows
+past the lane ``pos`` are masked to an exact constant, so outputs are
+bit-identical, not approximately equal (``tests/test_paged_decode.py``) —
+and scatter back only the blocks the step wrote. See docs/architecture.md
+§"Paged KV" for the table lifecycle and the incremental
+(``kv_reservation="incremental"``) grow-or-preempt contract.
+
 **Prefix caching** (``prefix_caching=True`` on :class:`Engine` /
-:func:`serve`): the core's allocator refcounts content-named KV blocks, and
-this backend keeps the matching device-side KV: when a request's prompt
-finishes prefilling, the per-block K/V slices of its (real-token) prefix are
-copied out of its lane into a hash-keyed **fragment store**; when a later
-admission hits that prefix, the backend claims a slot, concatenates the
-chain's fragments, writes them into the new lane at positions ``[0,
-cached)``, sets the lane ``pos``, and only runs ``_extend_chunk`` on the
-non-shared suffix. Because attention at position i depends only on tokens
-``<= i``, the donor's prefix KV is bit-identical to what the recipient would
-have computed itself — greedy outputs with caching on equal caching off
+:func:`serve`): the core's allocator refcounts content-named KV blocks. In
+paged mode a hit is **zero-copy**: the allocator aliased the committed
+prefix blocks into the new request's table at reservation time and the pool
+rows are the cache, so the backend just claims a slot and resumes prefill at
+the cached offset (``prefix_tokens_copied`` stays 0). In contiguous mode
+(``paged=False``) the backend keeps the historical hash-keyed **fragment
+store**: per-block K/V slices are copied out of a donor lane at prompt
+completion, and a hit concatenates the chain's fragments into the new lane
+at ``[0, cached)`` before running ``_extend_chunk`` on the non-shared
+suffix. Because attention at position i depends only on tokens ``<= i``,
+the donor's prefix KV is bit-identical to what the recipient would have
+computed itself — greedy outputs with caching on equal caching off
 token-for-token (asserted in ``tests/test_prefix_caching.py``). The store
 shrinks in lockstep with the allocator's LRU: an eviction listener drops the
 fragment the moment accounting reclaims its block.
@@ -65,7 +80,8 @@ from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
 from repro.models import transformer as tfm
 from repro.serving.core import PrefillChunk, ServingCore, WallClock
-from repro.serving.kv_cache import BlockAllocator, prefix_chunk_hashes
+from repro.serving.kv_cache import (UNBOUNDED_BLOCKS, BlockAllocator,
+                                    prefix_chunk_hashes)
 from repro.serving.metrics import LatencyReport, report
 from repro.serving.sampler import SamplerConfig, sample
 
@@ -82,7 +98,7 @@ class RealBackend:
                  tokenizer: Optional[HashTokenizer] = None,
                  sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
                  bucketed: bool = True, min_bucket: int = 8,
-                 record_tokens: bool = False):
+                 record_tokens: bool = False, paged: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -91,6 +107,7 @@ class RealBackend:
         self.bucketed = bucketed
         self.min_bucket = min(min_bucket, prompt_len)
         self.record_tokens = record_tokens
+        self.paged = paged
         self.tok = tokenizer or HashTokenizer(
             vocab_size=min(cfg.vocab_size, 2048), max_len=prompt_len)
         self._key = jax.random.PRNGKey(seed)
@@ -105,11 +122,27 @@ class RealBackend:
         self.cache = jax.tree.map(
             lambda l: jnp.zeros((max_batch,) + l.shape, l.dtype), row_cache)
 
-        # --- prefix-cache fragment store -------------------------------------
+        # --- prefix-cache fragment store (contiguous mode only) --------------
         # chunk-chain hash -> {"k": (L, block, kvH, D), "v": ...} device K/V of
         # one content-named block, copied out of a donor lane at prompt
-        # completion; dropped via the allocator's eviction listener
+        # completion; dropped via the allocator's eviction listener. Paged
+        # mode has no store: a hit aliases pool blocks into the new table.
         self._prefix_store: Dict[int, dict] = {}
+
+        # --- paged KV pool (built at attach: sized by the core's allocator) --
+        # pools are (total_blocks + 1, L, block_size, KH, dh); the extra
+        # trailing block is the *null* block — table padding that absorbs
+        # out-of-reservation writes and whose reads are always masked
+        self.k_pool = None
+        self.v_pool = None
+        self._null_block: Optional[int] = None
+        self._lane_blocks: Optional[int] = None    # cache_len // block_size
+        # req_id -> device-equivalent lane ``pos`` (tokens resident): set to
+        # the prefill target at prompt completion, +1 per decode step —
+        # mirrors the contiguous cache's per-slot ``pos`` leaf exactly,
+        # including recompute re-admissions (where tokens_done is preserved
+        # but the lane restarts at the target)
+        self._pos: Dict[int, int] = {}
 
         # --- instrumentation -------------------------------------------------
         self.prefill_dispatches = 0   # jitted first-chunk forward_seq launches
@@ -121,6 +154,7 @@ class RealBackend:
 
         # --- jitted programs -------------------------------------------------
         sampler_cfg = sampler
+        self._sampler_cfg = sampler
 
         @jax.jit
         def _prefill_bucket(params, tokens, slot_ids, key):
@@ -268,11 +302,164 @@ class RealBackend:
                 f"prefill_chunk_tokens={core.prefill_chunk_tokens} "
                 f"exceeds cache_len={self.cache_len}: a continuation "
                 f"chunk must fit the cache lane it extends")
-        if core.prefix_caching:
+        if core.prefix_caching and not self.paged:
             # keep the device-side store in lockstep with the accounting:
             # when the allocator reclaims a cached block, its KV goes too
+            # (paged mode needs no mirror — the pool block *is* the cache
+            # entry, and the allocator's refcount/LRU governs it directly)
             core.allocator.add_evict_listener(
                 lambda h: self._prefix_store.pop(h, None))
+        if self.paged:
+            if self.cfg.family not in (DENSE, MOE, VLM) or self.cfg.is_encdec:
+                raise ValueError(
+                    f"paged KV needs an attention-family model (got "
+                    f"{self.cfg.family}): recurrent / cross-attention "
+                    f"caches are not block-structured")
+            if self.cfg.sliding_window:
+                raise ValueError(
+                    "paged KV uses full-length block tables; sliding-window "
+                    "lanes are shorter than the position space they cover")
+            alloc = core.allocator
+            if alloc.total_blocks >= UNBOUNDED_BLOCKS:
+                raise ValueError("paged KV needs a bounded allocator: the "
+                                 "pool is materialized at total_blocks")
+            if self.cache_len % alloc.block_size or \
+                    self.cache_len < alloc.block_size:
+                raise ValueError(
+                    f"paged KV needs block_size | cache_len "
+                    f"(got {alloc.block_size} and {self.cache_len})")
+            self._build_paged(alloc)
+
+    # ------------------------------------------------------------- paged pool
+    def _build_paged(self, alloc: BlockAllocator) -> None:
+        """Materialize the global KV pool and compile the paged programs.
+
+        Layout: ``(total_blocks + 1, L, block_size, KH, dh)`` per pool —
+        block-major so one table entry is one contiguous row. The serving
+        truth lives here; per-dispatch the programs gather a request's
+        table into a contiguous ``(L, 1, cache_len, KH, dh)`` lane, run the
+        *same* ``forward_chunk`` / ``decode_step`` math as contiguous mode
+        (rows at positions >= pos are masked to an exact constant, so
+        gathered-garbage lanes produce bit-identical outputs), and scatter
+        only the blocks the step wrote back into the pool."""
+        cfg, sampler_cfg = self.cfg, self._sampler_cfg
+        kshape = self.cache["k"].shape            # (max_batch, L, 1, W, KH, dh)
+        L, _, W, KH, dh = kshape[1:]
+        bs = alloc.block_size
+        mb = W // bs
+        n = alloc.total_blocks
+        self._null_block = n
+        self._lane_blocks = mb
+        self.k_pool = jnp.zeros((n + 1, L, bs, KH, dh), self.cache["k"].dtype)
+        self.v_pool = jnp.zeros((n + 1, L, bs, KH, dh), self.cache["v"].dtype)
+
+        def lane(pool, table):
+            """Gather one table into a contiguous cache lane
+            (max_blocks,) → (L, 1, W, KH, dh)."""
+            x = pool[table]                       # (mb, L, bs, KH, dh)
+            return jnp.moveaxis(x, 1, 0).reshape(L, 1, W, KH, dh)
+
+        @jax.jit
+        def _place_paged(k_pool, v_pool, bucket_k, bucket_v, full_tokens,
+                         nxt, tables, slot_ids):
+            """Scatter a prefilled bucket's leading blocks into the pool.
+
+            ``bucket_k/v``: (L, B, W, KH, dh) from ``_prefill_bucket``;
+            ``tables``: (B, nb) physical destination of each sequence's
+            first nb = ceil(bucket_len / bs) blocks (padding lanes replay
+            lane 0, so duplicate writes are idempotent; null entries absorb
+            unreserved rows)."""
+            nb = tables.shape[1]
+
+            def to_blocks(x):                     # → (B, nb, L, bs, KH, dh)
+                xb = x[:, :, :nb * bs].reshape(L, x.shape[1], nb, bs, KH, dh)
+                return jnp.moveaxis(xb, (0, 1, 2), (2, 0, 1))
+
+            k_pool = k_pool.at[tables].set(to_blocks(bucket_k))
+            v_pool = v_pool.at[tables].set(to_blocks(bucket_v))
+            return k_pool, v_pool, full_tokens.at[slot_ids].set(nxt[:, None])
+
+        @jax.jit
+        def _extend_chunk_paged(params, k_pool, v_pool, full_tokens, tokens,
+                                slot_ids, tables, starts, commit, key):
+            """Continuation chunk over gathered lanes (paged twin of
+            ``_extend_chunk``). Writes land at [start, start+C) in lane
+            space; the touched blocks — at most ceil(C/bs)+1 of them — are
+            sliced back out of the updated lane and scattered to their pool
+            homes. Slice start and destination indices clamp identically,
+            so a clamped window only re-writes unchanged blocks with their
+            own content (bitwise no-op, shared-prefix safe)."""
+            c = tokens.shape[1]
+            nb_w = min(mb, -(-c // bs) + 1)
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(slot_ids)
+
+            def one(table, toks, start, k):
+                row = {"k": lane(k_pool, table), "v": lane(v_pool, table),
+                       "pos": start}
+                logits, new_row = tfm.forward_chunk(params, cfg,
+                                                    toks[None], row)
+                jc = jnp.clip(start // bs, 0, mb - nb_w)
+                dest = jax.lax.dynamic_slice(table, (jc,), (nb_w,))
+                dk = jax.lax.dynamic_slice(new_row["k"], (0, 0, jc * bs, 0, 0),
+                                           (L, 1, nb_w * bs, KH, dh))
+                dv = jax.lax.dynamic_slice(new_row["v"], (0, 0, jc * bs, 0, 0),
+                                           (L, 1, nb_w * bs, KH, dh))
+                return sample(logits[0, -1], k, sampler_cfg), dest, dk, dv
+
+            nxt, dest, dk, dv = jax.vmap(one)(tables, tokens, starts, keys)
+
+            def to_blocks(x):                     # → (B, nb_w, L, bs, KH, dh)
+                xb = x[:, :, 0].reshape(x.shape[0], L, nb_w, bs, KH, dh)
+                return jnp.moveaxis(xb, 2, 1)
+
+            k_pool = k_pool.at[dest].set(to_blocks(dk))
+            v_pool = v_pool.at[dest].set(to_blocks(dv))
+            kept = jnp.where(commit[:, None], nxt[:, None],
+                             full_tokens[slot_ids])
+            return full_tokens.at[slot_ids].set(kept), k_pool, v_pool
+
+        @jax.jit
+        def _decode_paged(params, k_pool, v_pool, full_tokens, idx, tables,
+                          poss, key):
+            """One decode iteration over gathered lanes (paged twin of
+            ``_decode_active``). ``poss`` is the host-tracked lane position
+            per active slot; the single KV row the step writes lands in
+            block ``table[(pos % W) // bs]`` — a wrap (pos >= W, caching
+            off) overwrites the sequence's own oldest block, which is
+            exactly the contiguous ring semantics."""
+            sub_tokens = full_tokens[idx]
+            keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+
+            def one(table, token_row, pos, k):
+                row = {"k": lane(k_pool, table), "v": lane(v_pool, table),
+                       "pos": pos}
+                logits, new_row = tfm.decode_step(params, cfg, row,
+                                                  token_row[None])
+                j = (pos % W) // bs
+                dest = table[j]
+                dk = jax.lax.dynamic_slice(new_row["k"], (0, 0, j * bs, 0, 0),
+                                           (L, 1, bs, KH, dh))
+                dv = jax.lax.dynamic_slice(new_row["v"], (0, 0, j * bs, 0, 0),
+                                           (L, 1, bs, KH, dh))
+                return sample(logits[0], k, sampler_cfg), dest, dk, dv
+
+            nxt, dest, dk, dv = jax.vmap(one)(tables, sub_tokens, poss, keys)
+            k_pool = k_pool.at[dest].set(dk[:, :, 0])
+            v_pool = v_pool.at[dest].set(dv[:, :, 0])
+            return full_tokens.at[idx].set(nxt[:, None]), k_pool, v_pool
+
+        self._place_paged = _place_paged
+        self._extend_chunk_paged = _extend_chunk_paged
+        self._decode_paged = _decode_paged
+
+    def _table(self, req: Request, n: int) -> List[int]:
+        """First ``n`` entries of the request's block table, null-padded —
+        the per-dispatch physical index row. Unreserved requests (direct
+        backend calls in unit tests) get an all-null table: their KV lands
+        in the trash block and reads of it are masked."""
+        tbl = (self.core.allocator.block_table(req.req_id)[:n]
+               if self.core is not None else [])
+        return tbl + [self._null_block] * (n - len(tbl))
 
     def kv_demand(self, req: Request) -> int:
         return self.prompt_len + min(req.true_length, self.cache_len)
@@ -350,6 +537,7 @@ class RealBackend:
             suffixes = sorted(bl - c for bl in buckets
                               for c in range(bs, bl, bs))
             ext_lens.update(suffixes[:8])
+        bs = self.core.allocator.block_size if self.paged else 0
         for bl in sorted(buckets | ext_lens):
             for bsz in sizes:
                 tokens = jnp.zeros((bsz, bl), jnp.int32)
@@ -357,13 +545,33 @@ class RealBackend:
                 if bl in buckets:
                     nxt, cache = self._prefill_bucket(self.params, tokens,
                                                       slots, key)
-                    self._place(self.cache, cache, self.slot_tokens, nxt,
-                                slots)
+                    if self.paged:
+                        # null-block tables: the warm dispatches scribble on
+                        # the trash block only
+                        nb = -(-bl // bs)
+                        self._place_paged(
+                            self.k_pool, self.v_pool, cache["k"], cache["v"],
+                            self.slot_tokens, nxt,
+                            jnp.full((bsz, nb), self._null_block, jnp.int32),
+                            slots)
+                    else:
+                        self._place(self.cache, cache, self.slot_tokens, nxt,
+                                    slots)
                 if bl in ext_lens:
-                    self._extend_chunk(self.params, self.cache,
-                                       self.slot_tokens, tokens, slots,
-                                       jnp.zeros((bsz,), bool), key)
-        if self.core is not None and self.core.prefix_caching:
+                    if self.paged:
+                        self._extend_chunk_paged(
+                            self.params, self.k_pool, self.v_pool,
+                            self.slot_tokens, tokens, slots,
+                            jnp.full((bsz, self._lane_blocks),
+                                     self._null_block, jnp.int32),
+                            jnp.zeros((bsz,), jnp.int32),
+                            jnp.zeros((bsz,), bool), key)
+                    else:
+                        self._extend_chunk(self.params, self.cache,
+                                           self.slot_tokens, tokens, slots,
+                                           jnp.zeros((bsz,), bool), key)
+        if self.core is not None and self.core.prefix_caching and \
+                not self.paged:
             # warm the prefix-install ops (fragment concat + lane scatters)
             # for every block-multiple offset. Scribbling on slot 0 is
             # harmless: a slot claim always rewrites [0, pos) before use and
@@ -377,9 +585,17 @@ class RealBackend:
                 self.cache["v"] = self.cache["v"].at[0, :, 0, :c].set(k)
                 self.cache["pos"] = self.cache["pos"].at[0].set(0)
         for bsz in sizes:
-            out, _ = self._decode_active(self.params, self.cache,
-                                         self.slot_tokens,
-                                         jnp.zeros((bsz,), jnp.int32), key)
+            if self.paged:
+                out, _, _ = self._decode_paged(
+                    self.params, self.k_pool, self.v_pool, self.slot_tokens,
+                    jnp.zeros((bsz,), jnp.int32),
+                    jnp.full((bsz, self._lane_blocks), self._null_block,
+                             jnp.int32),
+                    jnp.zeros((bsz,), jnp.int32), key)
+            else:
+                out, _ = self._decode_active(self.params, self.cache,
+                                             self.slot_tokens,
+                                             jnp.zeros((bsz,), jnp.int32), key)
         jax.block_until_ready(out)
         return time.perf_counter() - t0
 
@@ -461,8 +677,25 @@ class RealBackend:
                 slot = self.slot_req.index(None)
                 self.slot_req[slot] = req
                 self._slot_of[req.req_id] = slot
+                if self.paged and self.core is not None \
+                        and self.core.prefix_caching \
+                        and self.prefill_total(req) + req.true_length - 1 \
+                        > self.cache_len:
+                    raise ValueError(
+                        f"paged KV with prefix caching cannot ring-wrap: "
+                        f"request {req.req_id} needs "
+                        f"{self.prefill_total(req) + req.true_length - 1} "
+                        f"positions > cache_len={self.cache_len} (a wrap "
+                        f"would overwrite potentially shared prefix blocks)")
                 if start > 0:               # admission at a cached offset
-                    self._install_prefix(slot, req, start)
+                    if self.paged:
+                        # zero-copy hit: the reservation already aliased the
+                        # shared prefix blocks into this request's table, so
+                        # the pool rows *are* its cache — no KV moves, the
+                        # suffix chunk below just resumes at ``start``
+                        self.prefix_installs += 1
+                    else:
+                        self._install_prefix(slot, req, start)
             if start == 0:
                 first_groups.setdefault(end, []).append(req)
             else:
@@ -487,28 +720,56 @@ class RealBackend:
             slots_j = jnp.asarray(slots)
             nxt, bucket_cache = self._prefill_bucket(
                 self.params, jnp.asarray(tokens), slots_j, sub)
-            self.cache, self.slot_tokens = self._place(
-                self.cache, bucket_cache, self.slot_tokens, nxt, slots_j)
+            if self.paged:
+                bs = self.core.allocator.block_size
+                nb = -(-bucket_len // bs)
+                tables = np.full((b, nb), self._null_block, np.int32)
+                for j, req in enumerate(group):
+                    tables[j] = self._table(req, nb)
+                tables[len(group):] = tables[0]
+                self.k_pool, self.v_pool, self.slot_tokens = self._place_paged(
+                    self.k_pool, self.v_pool, bucket_cache["k"],
+                    bucket_cache["v"], self.slot_tokens, nxt,
+                    jnp.asarray(tables), slots_j)
+            else:
+                self.cache, self.slot_tokens = self._place(
+                    self.cache, bucket_cache, self.slot_tokens, nxt, slots_j)
             self.prefill_dispatches += 1
 
         for chunk_len, group in sorted(ext_groups.items()):
             b = _next_pow2(len(group))
             tokens = np.zeros((b, chunk_len), np.int32)
             slots = np.zeros((b,), np.int32)
+            starts = np.zeros((b,), np.int32)
             commit = np.zeros((b,), bool)
             for j, (req, start, end) in enumerate(group):
                 ids = self._prompt_ids(req)[start:end]
                 tokens[j, :len(ids)] = ids      # tail past len(ids) = pad 0s
                 slots[j] = self._slot_of[req.req_id]
+                starts[j] = start
                 commit[j] = end >= self.prefill_total(req)
             tokens[len(group):] = tokens[0]
             slots[len(group):] = slots[0]
+            starts[len(group):] = starts[0]
             commit[len(group):] = commit[0]
             self._key, sub = jax.random.split(self._key)
-            self.slot_tokens, self.cache = self._extend_chunk(
-                self.params, self.cache, self.slot_tokens,
-                jnp.asarray(tokens), jnp.asarray(slots), jnp.asarray(commit),
-                sub)
+            if self.paged:
+                tables = np.full((b, self._lane_blocks), self._null_block,
+                                 np.int32)
+                for j, (req, _s, _e) in enumerate(group):
+                    tables[j] = self._table(req, self._lane_blocks)
+                tables[len(group):] = tables[0]
+                self.slot_tokens, self.k_pool, self.v_pool = \
+                    self._extend_chunk_paged(
+                        self.params, self.k_pool, self.v_pool,
+                        self.slot_tokens, jnp.asarray(tokens),
+                        jnp.asarray(slots), jnp.asarray(tables),
+                        jnp.asarray(starts), jnp.asarray(commit), sub)
+            else:
+                self.slot_tokens, self.cache = self._extend_chunk(
+                    self.params, self.cache, self.slot_tokens,
+                    jnp.asarray(tokens), jnp.asarray(slots),
+                    jnp.asarray(commit), sub)
             self.extend_dispatches += 1
 
         jax.block_until_ready(self.slot_tokens)
@@ -519,7 +780,12 @@ class RealBackend:
             if end < self.prefill_total(req):
                 continue                        # still mid-prompt
             self.prefill_requests += 1
-            self._store_prefix(req)             # prompt KV is now citable
+            if self.paged:
+                # the pool blocks *are* the citable KV (the core commits
+                # their hashes); start the host mirror of the lane pos
+                self._pos[req.req_id] = self.prefill_total(req)
+            else:
+                self._store_prefix(req)         # prompt KV is now citable
             # recompute semantics on re-admission after preemption: decode
             # progress and TTFT are preserved, matching SimBackend
             if req.tokens_done == 0:
@@ -541,19 +807,35 @@ class RealBackend:
             active + [active[0]] * (_next_pow2(len(active)) - len(active)),
             np.int32)
         self._key, sub = jax.random.split(self._key)
-        self.slot_tokens, self.cache = self._decode_active(
-            self.params, self.cache, self.slot_tokens, jnp.asarray(idx), sub)
+        if self.paged:
+            tables = np.full((len(idx), self._lane_blocks), self._null_block,
+                             np.int32)
+            poss = np.zeros((len(idx),), np.int32)
+            for j, i in enumerate(idx):
+                req = self.slot_req[i]
+                tables[j] = self._table(req, self._lane_blocks)
+                poss[j] = self._pos[req.req_id]
+            self.slot_tokens, self.k_pool, self.v_pool = self._decode_paged(
+                self.params, self.k_pool, self.v_pool, self.slot_tokens,
+                jnp.asarray(idx), jnp.asarray(tables), jnp.asarray(poss), sub)
+        else:
+            self.slot_tokens, self.cache = self._decode_active(
+                self.params, self.cache, self.slot_tokens, jnp.asarray(idx),
+                sub)
         jax.block_until_ready(self.slot_tokens)
         now = self._now(now)
         toks = self._tokens_snapshot()
         for i in active:
             self.slot_req[i].tokens_done += 1
+            if self.paged:
+                self._pos[self.slot_req[i].req_id] += 1
             if toks is not None:
                 self._record(self.slot_req[i], toks[i, 0], now)
         return now
 
     def release(self, req: Request) -> None:
         self._ids.pop(req.req_id, None)
+        self._pos.pop(req.req_id, None)
         slot = self._slot_of.pop(req.req_id, None)
         if slot is not None:
             self.slot_req[slot] = None
@@ -570,20 +852,30 @@ class Engine:
                  bucketed: bool = True,
                  prefill_chunk_tokens: Optional[int] = None,
                  prefix_caching: bool = False,
+                 paged: Optional[bool] = None,
+                 kv_reservation: str = "full",
                  record_tokens: bool = False,
                  record_token_times: bool = False):
+        if paged is None:
+            # auto: block-structured KV exists exactly for attention-family
+            # append caches; recurrent/enc-dec/sliding-window lanes keep the
+            # historical contiguous path
+            paged = (cfg.family in (DENSE, MOE, VLM) and not cfg.is_encdec
+                     and not cfg.sliding_window)
         s = scheduler.max_batch
         self.scheduler = scheduler
         self.backend = RealBackend(
             cfg, params, max_batch=s, cache_len=cache_len,
             prompt_len=prompt_len, tokenizer=tokenizer, sampler=sampler,
-            seed=seed, bucketed=bucketed, record_tokens=record_tokens)
+            seed=seed, bucketed=bucketed, record_tokens=record_tokens,
+            paged=paged)
         self.allocator = allocator or BlockAllocator(
             total_blocks=s * (-(-cache_len // 16)), block_size=16)
         self.core = ServingCore(scheduler, self.backend,
                                 allocator=self.allocator,
                                 prefill_chunk_tokens=prefill_chunk_tokens,
                                 prefix_caching=prefix_caching,
+                                kv_reservation=kv_reservation,
                                 record_token_times=record_token_times)
 
     # -------------------------------------------------------------------- api
@@ -616,7 +908,9 @@ def serve(cfg: ModelConfig, params, requests: Sequence[Request], policy, *,
           log_every: float = 0.0, bucketed: bool = True,
           kv_blocks: Optional[int] = None,
           prefill_chunk_tokens: Optional[int] = None,
-          prefix_caching: bool = False) -> LatencyReport:
+          prefix_caching: bool = False,
+          paged: Optional[bool] = None,
+          kv_reservation: str = "full") -> LatencyReport:
     """Convenience wrapper: fresh engine + scheduler, serve, report."""
     sched = Scheduler(policy=policy, max_batch=max_batch,
                       starvation_threshold=starvation_threshold)
@@ -624,7 +918,8 @@ def serve(cfg: ModelConfig, params, requests: Sequence[Request], policy, *,
     eng = Engine(cfg, params, sched, cache_len=cache_len,
                  prompt_len=prompt_len, allocator=allocator,
                  bucketed=bucketed, prefill_chunk_tokens=prefill_chunk_tokens,
-                 prefix_caching=prefix_caching)
+                 prefix_caching=prefix_caching, paged=paged,
+                 kv_reservation=kv_reservation)
     eng.submit(requests)
     finished = eng.run(time_scale=time_scale, log_every=log_every)
     assert len(finished) == len(requests), (len(finished), len(requests))

@@ -100,6 +100,13 @@ class BlockAllocator:
         """Blocks currently held by ``req_id`` (0 if none)."""
         return len(self._req_blocks.get(req_id, ()))
 
+    def block_table(self, req_id: int) -> List[int]:
+        """The request's physical block ids in logical (prompt) order — the
+        per-sequence block table a paged backend indexes its KV pool with.
+        Leading entries may alias another request's blocks (shared prefix);
+        a copy, so callers can pad/truncate freely."""
+        return list(self._req_blocks.get(req_id, ()))
+
     def add_evict_listener(self, fn: Callable[[int], None]) -> None:
         """``fn(hash)`` fires when a cached block's content is dropped (LRU
         reclaim or release of an uncommitted owner) — backends keep their
@@ -211,20 +218,34 @@ class BlockAllocator:
             if h is not None and self._hash_block.get(h) == b:
                 self._committed.add(b)
 
-    def extend(self, req_id: int, total_tokens: int) -> bool:
-        """Grow (or shrink) a request's reservation to ``total_tokens``;
-        False if growth exceeds capacity. Growth appends anonymous blocks —
-        decode-phase KV is per-request, never content-shared."""
-        need = self.blocks_for(total_tokens)
-        cur = self._req_blocks.setdefault(req_id, [])
-        delta = need - len(cur)
-        if delta > self.free_blocks:
+    def grow(self, req_id: int, n: int) -> bool:
+        """Append ``n`` fresh anonymous blocks to a reservation (the
+        incremental decode-phase allocation unit: one table entry per call
+        site, never content-shared). False — with the reservation intact —
+        when ``n`` exceeds free capacity; LRU-parked cached blocks count as
+        free and are reclaimed on demand, exactly like :meth:`allocate`."""
+        if n <= 0:
+            return True
+        if n > self.free_blocks:
             return False
-        for _ in range(max(delta, 0)):
+        cur = self._req_blocks.setdefault(req_id, [])
+        for _ in range(n):
             b = self._take_block()
             self._refcount[b] = 1
             cur.append(b)
-        for _ in range(max(-delta, 0)):
+        return True
+
+    def extend(self, req_id: int, total_tokens: int) -> bool:
+        """Grow (or shrink) a request's reservation to ``total_tokens``;
+        False if growth exceeds capacity. Growth appends anonymous blocks
+        (via :meth:`grow`) — decode-phase KV is per-request, never
+        content-shared."""
+        need = self.blocks_for(total_tokens)
+        cur = self._req_blocks.setdefault(req_id, [])
+        delta = need - len(cur)
+        if delta > 0:
+            return self.grow(req_id, delta)
+        for _ in range(-delta):
             self._decref(cur.pop())
         return True
 

@@ -41,6 +41,10 @@ class LatencyReport:
     # carries ``cached_prefix_tokens`` once the core looked its prefix up)
     prefix_hit_rate: float = float("nan")       # share of requests with a hit
     prefill_tokens_saved: float = float("nan")  # prompt tokens not recomputed
+    # Incremental KV reservation (NaN when the run reserved full demand at
+    # admission — the counters only exist under kv_reservation="incremental")
+    grow_failures: float = float("nan")         # decode-time grow denials
+    grow_preemptions: float = float("nan")      # evictions those denials forced
 
     def row(self) -> str:
         return (f"{self.policy:10s} n={self.n_requests:5d} "
@@ -97,6 +101,10 @@ def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
     tokens = sum(r.true_length for r in finished)
     cached = np.asarray([r.cached_prefix_tokens for r in finished
                          if r.cached_prefix_tokens is not None], dtype=float)
+    growf = np.asarray([r.grow_failures for r in finished
+                        if r.grow_failures is not None], dtype=float)
+    growp = np.asarray([r.grow_preemptions for r in finished
+                        if r.grow_preemptions is not None], dtype=float)
     return LatencyReport(
         policy=policy,
         n_requests=len(finished),
@@ -112,4 +120,6 @@ def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
         prefix_hit_rate=_mean(cached > 0),
         prefill_tokens_saved=float(cached.sum()) if len(cached)
         else float("nan"),
+        grow_failures=float(growf.sum()) if len(growf) else float("nan"),
+        grow_preemptions=float(growp.sum()) if len(growp) else float("nan"),
     )

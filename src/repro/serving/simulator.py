@@ -116,7 +116,9 @@ def simulate(requests: Sequence[Request], scheduler: Scheduler, *,
              kv_blocks: Optional[int] = None, block_size: int = 16,
              prefill_chunk_tokens: Optional[int] = None,
              prefix_caching: bool = False,
-             record_token_times: bool = False) -> List[Request]:
+             kv_reservation: str = "full",
+             record_token_times: bool = False,
+             on_step=None) -> List[Request]:
     """Run to completion; returns the finished requests (with timestamps).
 
     ``kv_blocks`` bounds the KV cache (in ``block_size``-token blocks);
@@ -124,16 +126,20 @@ def simulate(requests: Sequence[Request], scheduler: Scheduler, *,
     ``prefill_chunk_tokens`` enables mixed prefill/decode iterations and
     ``prefix_caching`` shares KV blocks across common prompt prefixes
     (see :class:`~repro.serving.core.ServingCore`) — a cache-hit admission
-    only charges the non-shared suffix's prefill tokens."""
+    only charges the non-shared suffix's prefill tokens.
+    ``kv_reservation="incremental"`` admits on prompt + one decode block and
+    grows per step (the paged-KV admission policy); the accounting is the
+    shared core's, so decisions mirror the real engine's exactly."""
     allocator = (BlockAllocator(kv_blocks, block_size) if kv_blocks
                  else BlockAllocator.unbounded(block_size))
     core = ServingCore(scheduler, SimBackend(cost), allocator=allocator,
                        clock=VirtualClock(),
                        prefill_chunk_tokens=prefill_chunk_tokens,
                        prefix_caching=prefix_caching,
+                       kv_reservation=kv_reservation,
                        record_token_times=record_token_times)
     core.submit(requests)
-    return core.run(max_time=max_time)
+    return core.run(max_time=max_time, on_step=on_step)
 
 
 def run_policy(requests: Sequence[Request], policy, *, max_batch: int = 16,
@@ -141,7 +147,8 @@ def run_policy(requests: Sequence[Request], policy, *, max_batch: int = 16,
                starvation_threshold: float = 120.0,
                kv_blocks: Optional[int] = None,
                prefill_chunk_tokens: Optional[int] = None,
-               prefix_caching: bool = False) -> LatencyReport:
+               prefix_caching: bool = False,
+               kv_reservation: str = "full") -> LatencyReport:
     """Convenience: fresh scheduler + simulate + report."""
     # deep-ish copy so one policy run doesn't pollute another
     reqs = [Request(r.req_id, r.prompt, r.arrival_time, r.prompt_len,
@@ -151,6 +158,7 @@ def run_policy(requests: Sequence[Request], policy, *, max_batch: int = 16,
                       starvation_threshold=starvation_threshold)
     finished = simulate(reqs, sched, cost=cost, kv_blocks=kv_blocks,
                         prefill_chunk_tokens=prefill_chunk_tokens,
-                        prefix_caching=prefix_caching)
+                        prefix_caching=prefix_caching,
+                        kv_reservation=kv_reservation)
     assert len(finished) == len(requests), (len(finished), len(requests))
     return report(policy.name, finished)

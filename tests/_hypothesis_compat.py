@@ -3,7 +3,7 @@ stand-in so the property tests still exercise the invariants on a clean
 environment (satellite fix: a hard import aborted the whole suite).
 
 The stand-in supports exactly what this repo's tests use — ``integers``,
-``floats``, ``lists`` strategies, ``@given(**kwargs)`` and a no-op
+``floats``, ``booleans``, ``lists`` strategies, ``@given(**kwargs)`` and a no-op
 ``settings`` — and replays a fixed number of seeded random examples. It does
 no shrinking; install ``hypothesis`` (requirements-dev.txt) for real
 property-based testing.
@@ -27,6 +27,10 @@ except ModuleNotFoundError:
         @staticmethod
         def floats(min_value, max_value, allow_nan=True, allow_infinity=True):
             return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
 
         @staticmethod
         def lists(elements, min_size=0, max_size=None):

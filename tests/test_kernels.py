@@ -7,8 +7,10 @@ import pytest
 
 from repro.kernels.flash_prefill.ops import flash_attention
 from repro.kernels.flash_prefill.ref import flash_prefill_ref
-from repro.kernels.flash_decode.ops import decode_attention_pallas
-from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.flash_decode.ops import (decode_attention_pallas,
+                                            paged_decode_attention_pallas)
+from repro.kernels.flash_decode.ref import (flash_decode_paged_ref,
+                                            flash_decode_ref)
 from repro.kernels.rwkv6_chunk.ops import linear_attention_pallas
 from repro.kernels.rwkv6_chunk.ref import rwkv6_recurrent_ref
 from repro.models.attention import decode_attention
@@ -63,6 +65,84 @@ def test_flash_decode_matches_model(b, h, kh, w, dh, pos, win, dtype):
     ref = decode_attention(q, kc, vc, pos, window=win)  # XLA twin in the model
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def _paged_setup(seed, b, kh, bs, mb, dh, n_blocks, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    k_pool = jax.random.normal(ks[0], (n_blocks, kh, bs, dh), dtype)
+    v_pool = jax.random.normal(ks[1], (n_blocks, kh, bs, dh), dtype)
+    # shuffled tables, with deliberate cross-sequence aliasing: every
+    # sequence's first block is block 0 (a shared prefix in pool terms)
+    rng = np.random.default_rng(seed)
+    tables = np.stack([rng.permutation(n_blocks)[:mb] for _ in range(b)])
+    tables[:, 0] = 0
+    return ks[2], k_pool, v_pool, jnp.asarray(tables, jnp.int32)
+
+
+@pytest.mark.parametrize("b,h,kh,bs,mb,dh", [
+    (2, 8, 2, 16, 8, 64),            # GQA group 4
+    (1, 4, 4, 32, 4, 128),           # MHA
+    (3, 4, 1, 16, 6, 32),            # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_paged_matches_ref(b, h, kh, bs, mb, dh, dtype):
+    kq, k_pool, v_pool, tables = _paged_setup(7, b, kh, bs, mb, dh, 64, dtype)
+    q = jax.random.normal(kq, (b, h, dh), dtype)
+    # ragged: one full sequence, the rest at assorted partial lengths
+    lengths = jnp.asarray([mb * bs - (i * 7) % (mb * bs - 1) if i else mb * bs
+                           for i in range(b)], jnp.int32)
+    out = paged_decode_attention_pallas(q, k_pool, v_pool, tables, lengths)
+    g = h // kh
+    ref = flash_decode_paged_ref(q.reshape(b, kh, g, dh), k_pool, v_pool,
+                                 tables, lengths).reshape(b, h, dh)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_paged_linear_table_matches_contiguous(dtype):
+    """With the identity block table, the paged kernel must agree with the
+    contiguous flash_decode on the same (gathered) cache — the table
+    indirection itself must not perturb the math."""
+    b, h, kh, bs, mb, dh = 2, 8, 2, 16, 8, 64
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    k_pool = jax.random.normal(ks[0], (b * mb, kh, bs, dh), dtype)
+    v_pool = jax.random.normal(ks[1], (b * mb, kh, bs, dh), dtype)
+    q = jax.random.normal(ks[2], (b, h, dh), dtype)
+    tables = jnp.arange(b * mb, dtype=jnp.int32).reshape(b, mb)
+    lengths = jnp.asarray([mb * bs, mb * bs - 37], jnp.int32)
+    paged = paged_decode_attention_pallas(q, k_pool, v_pool, tables, lengths)
+    # contiguous layout: (b, w, kh, dh) cache holding the same rows
+    kc = jnp.moveaxis(k_pool.reshape(b, mb, kh, bs, dh), 2, 1) \
+        .reshape(b, kh, mb * bs, dh)
+    vc = jnp.moveaxis(v_pool.reshape(b, mb, kh, bs, dh), 2, 1) \
+        .reshape(b, kh, mb * bs, dh)
+    for i in range(b):
+        # contiguous pos attends slots [0, pos] inclusive; paged lengths
+        # count entries — pos = length - 1 views the same rows
+        row = decode_attention_pallas(
+            q[i:i + 1], jnp.moveaxis(kc[i:i + 1], 1, 2),
+            jnp.moveaxis(vc[i:i + 1], 1, 2), int(lengths[i]) - 1)
+        np.testing.assert_allclose(np.asarray(paged[i], np.float32),
+                                   np.asarray(row[0], np.float32),
+                                   **_tol(dtype))
+
+
+def test_flash_decode_paged_aliased_tables_share_exactly():
+    """Two sequences whose tables alias the same leading blocks and have the
+    same length produce bitwise-identical outputs for identical queries —
+    the zero-copy sharing guarantee the serving hit path relies on."""
+    b, h, kh, bs, mb, dh = 2, 4, 2, 16, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    k_pool = jax.random.normal(ks[0], (32, kh, bs, dh))
+    v_pool = jax.random.normal(ks[1], (32, kh, bs, dh))
+    q1 = jax.random.normal(ks[2], (1, h, dh))
+    q = jnp.concatenate([q1, q1])                 # same query both lanes
+    shared = [3, 9, 5]
+    tables = jnp.asarray([shared + [11], shared + [20]], jnp.int32)
+    lengths = jnp.asarray([3 * bs, 3 * bs], jnp.int32)  # tail block masked
+    out = paged_decode_attention_pallas(q, k_pool, v_pool, tables, lengths)
+    assert np.array_equal(np.asarray(out[0]), np.asarray(out[1]))
 
 
 @pytest.mark.parametrize("mode", ["rwkv", "ssd"])

@@ -1,0 +1,161 @@
+"""Paged KV serving: the real engine with block-table-pooled KV must be an
+*observable no-op* versus contiguous lanes — greedy outputs bit-identical in
+every mode combination — while the hit path stops copying KV entirely
+(zero-copy block aliasing) and incremental reservation admits more, recovers
+from grow failures by preemption, and never deadlocks.
+"""
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.scheduler.policies import fcfs
+from repro.core.scheduler.request import Request
+from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.engine import Engine
+from repro.serving.kv_cache import BlockAllocator
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.models import transformer as tfm
+
+    cfg = get_smoke_config("llama3_2_3b").replace(dtype="float32",
+                                                  vocab_size=2048)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _words(n, tag):
+    return " ".join(f"{tag}w{j}" for j in range(n))
+
+
+def _run(cfg, params, paged, *, chunk=None, caching=False, reservation="full",
+         allocator=None, cache_len=96, prompt_len=32, max_batch=4, reqs=None):
+    if reqs is None:
+        shared = _words(24, "sys")
+        reqs = [Request(i, shared + " " + _words(6, f"u{i}"), 0.0, 32, 4 + i)
+                for i in range(4)]
+        reqs += [Request(10 + i, _words(10, f"solo{i}"), 0.0, 32, 5)
+                 for i in range(2)]
+    eng = Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=max_batch),
+                 cache_len=cache_len, prompt_len=prompt_len, paged=paged,
+                 prefill_chunk_tokens=chunk, prefix_caching=caching,
+                 kv_reservation=reservation, allocator=allocator,
+                 record_tokens=True)
+    eng.submit(reqs)
+    fin = eng.run()
+    assert len(fin) == len(reqs)
+    return {r.req_id: r.generated_tokens for r in fin}, eng
+
+
+@pytest.mark.parametrize("chunk,caching", [
+    (None, False),            # plain bucketed admission + decode
+    (16, False),              # chunked prefill
+    (None, True),             # prefix caching (hit resumes mid-prompt)
+    (16, True),               # both composed
+])
+def test_paged_outputs_bit_identical_to_contiguous(setup, chunk, caching):
+    """Acceptance: greedy outputs are bit-identical paged vs contiguous,
+    including prefix-cache hits and chunked prefill."""
+    cfg, params = setup
+    contig, _ = _run(cfg, params, False, chunk=chunk, caching=caching)
+    paged, eng = _run(cfg, params, True, chunk=chunk, caching=caching)
+    assert paged == contig
+    assert eng.backend.paged
+    assert eng.allocator.used_blocks == 0          # everything released
+
+
+def test_paged_prefix_hit_copies_zero_tokens(setup):
+    """The paged hit path aliases pool blocks into the new request's table:
+    ``prefix_installs`` counts the claims, ``prefix_tokens_copied`` stays 0
+    (contiguous mode copies the fragments instead)."""
+    cfg, params = setup
+    shared = _words(30, "sys")
+
+    def two_phase(paged):
+        eng = Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=4),
+                     cache_len=96, prompt_len=64, paged=paged,
+                     prefix_caching=True, record_tokens=True)
+        eng.submit([Request(0, shared + " donor", 0.0, 40, 4)])
+        eng.run()
+        eng.submit([Request(10 + i, shared + " " + _words(4, f"u{i}"),
+                            0.0, 40, 4) for i in range(3)])
+        eng.run()
+        assert len(eng.finished) == 4
+        return eng
+
+    off = two_phase(False)
+    on = two_phase(True)
+    assert ({r.req_id: r.generated_tokens for r in on.finished}
+            == {r.req_id: r.generated_tokens for r in off.finished})
+    assert on.backend.prefix_installs == off.backend.prefix_installs == 3
+    assert off.backend.prefix_tokens_copied > 0    # fragment-store copies
+    assert on.backend.prefix_tokens_copied == 0    # zero-copy aliasing
+    hits = {r.req_id: r.cached_prefix_tokens for r in on.finished}
+    assert hits[0] == 0 and all(hits[10 + i] > 0 for i in range(3))
+
+
+def test_incremental_reservation_grow_preempts_and_recovers(setup):
+    """Under a KV budget too small for every admitted request's full demand,
+    incremental reservation over-admits, hits decode-time grow failures,
+    preempts deterministically, and still finishes every request with
+    correct token counts and a clean allocator."""
+    cfg, params = setup
+    reqs = [Request(i, _words(8, f"r{i}"), 0.0, 16, 24) for i in range(6)]
+    outs, eng = _run(cfg, params, True, reservation="incremental",
+                     allocator=BlockAllocator(8, 16), cache_len=48,
+                     prompt_len=16, max_batch=6, reqs=reqs)
+    fin = eng.finished
+    assert all(r.tokens_done == r.true_length for r in fin)
+    assert sum(r.grow_failures or 0 for r in fin) > 0
+    assert sum(r.grow_preemptions or 0 for r in fin) > 0
+    assert sum(r.preempt_count for r in fin) > 0   # victims really evicted
+    assert eng.allocator.used_blocks == 0
+
+    # same workload, same budget, full reservation: outputs still identical
+    # (admission order may differ; token streams must not)
+    reqs2 = [Request(i, _words(8, f"r{i}"), 0.0, 16, 24) for i in range(6)]
+    outs_full, eng_full = _run(cfg, params, True, reservation="full",
+                               allocator=BlockAllocator(8, 16), cache_len=48,
+                               prompt_len=16, max_batch=6, reqs=reqs2)
+    assert all(r.grow_failures is None for r in eng_full.finished)
+
+
+def test_paged_recompute_preemption_matches_contiguous(setup):
+    """Preemption + re-admission (recompute semantics) under paged KV:
+    outputs still bit-identical to the contiguous engine on the same
+    budget-constrained workload."""
+    cfg, params = setup
+
+    def constrained(paged):
+        reqs = [Request(i, _words(8, f"p{i}"), 0.0, 16, 12) for i in range(5)]
+        return _run(cfg, params, paged, allocator=BlockAllocator(6, 16),
+                    cache_len=32, prompt_len=16, max_batch=5, reqs=reqs)
+
+    contig, ec = constrained(False)
+    paged, ep = constrained(True)
+    assert paged == contig
+    assert ep.allocator.used_blocks == 0
+
+
+def test_paged_rejects_unbounded_allocator(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="bounded"):
+        Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=2),
+               cache_len=64, prompt_len=16, paged=True,
+               allocator=BlockAllocator.unbounded(16))
+
+
+def test_paged_auto_default_skips_recurrent_families():
+    """``paged=None`` auto-detects: attention families page, recurrent
+    families keep contiguous lanes (their cache is not block-structured)."""
+    from repro.models import transformer as tfm
+
+    cfg = get_smoke_config("rwkv6_7b").replace(dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=2),
+                 cache_len=64, prompt_len=16)
+    assert not eng.backend.paged
+    with pytest.raises(ValueError, match="attention-family"):
+        Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=2),
+               cache_len=64, prompt_len=16, paged=True)

@@ -92,7 +92,7 @@ def test_random_lifecycle_preserves_invariants(codes):
     a.add_evict_listener(on_evict)
     live, next_id = {}, 0
     for code in codes:
-        op = code % 4
+        op = code % 5
         if op == 0:                                    # admit
             variant, tokens = (code >> 2) % 6, 4 + (code >> 5) % 40
             ids = _stream(variant, tokens)
@@ -121,6 +121,18 @@ def test_random_lifecycle_preserves_invariants(codes):
             assert a.reserved(rid) == 0                # nothing held after
             a.free(rid)                                # idempotent
             assert a.reserved(rid) == 0
+        elif op == 4 and live:                         # incremental grow
+            # the paged decode path's allocation unit: append n anonymous
+            # blocks, all-or-nothing, reservation intact on denial
+            rid = sorted(live)[(code >> 2) % len(live)]
+            n_blk = (code >> 5) % 4
+            before = a.reserved(rid)
+            if a.grow(rid, n_blk):
+                assert a.reserved(rid) == before + n_blk
+                live[rid] = (before + n_blk) * BS
+            else:
+                assert a.reserved(rid) == before
+                assert n_blk > a.free_blocks
         _check_invariants(a)
     for rid in list(live):                             # drain: no leaks
         a.free(rid)
@@ -162,11 +174,14 @@ def test_mirror_store_tracks_eviction_listener(codes):
 @given(n=st.integers(min_value=2, max_value=10),
        shared_words=st.integers(min_value=0, max_value=48),
        budget=st.integers(min_value=8, max_value=40),
-       chunk=st.integers(min_value=8, max_value=64))
-def test_served_workloads_release_every_block(n, shared_words, budget, chunk):
+       chunk=st.integers(min_value=8, max_value=64),
+       incremental=st.booleans())
+def test_served_workloads_release_every_block(n, shared_words, budget, chunk,
+                                              incremental):
     """End-to-end through the ServingCore: a randomized shared-prefix
-    workload under a tight budget (chunked prefill + caching on) finishes
-    with the allocator clean — no request holds blocks after retirement."""
+    workload under a tight budget (chunked prefill + caching on, both
+    reservation modes) finishes with the allocator clean — no request holds
+    blocks after retirement, even across grow-failure preemptions."""
     prefix = " ".join(f"sys{i}" for i in range(shared_words))
     reqs = [Request(i, f"{prefix} tail{i} " +
                     " ".join(f"u{i}w{j}" for j in range(12)),
@@ -175,7 +190,8 @@ def test_served_workloads_release_every_block(n, shared_words, budget, chunk):
     sched = Scheduler(policy=fcfs(), max_batch=4)
     core = ServingCore(sched, SimBackend(CostModel()), allocator=alloc,
                        clock=VirtualClock(), prefill_chunk_tokens=chunk,
-                       prefix_caching=True)
+                       prefix_caching=True,
+                       kv_reservation="incremental" if incremental else "full")
     core.submit(reqs)
     finished = core.run()
     assert len(finished) == n
@@ -184,4 +200,5 @@ def test_served_workloads_release_every_block(n, shared_words, budget, chunk):
     for r in finished:
         assert alloc.reserved(r.req_id) == 0
         assert r.cached_prefix_tokens is not None      # caching was consulted
+        assert (r.grow_failures is not None) == incremental
     _check_invariants(alloc)

@@ -214,9 +214,13 @@ def _two_phase_real_run(cfg, params, caching, *, chunk=None):
     from repro.serving.engine import Engine
 
     shared = _words(40, "sys")
+    # paged=False: these tests pin the *fragment-store* hit path (install
+    # + copy counters); the paged zero-copy hit path is covered by
+    # tests/test_paged_decode.py
     eng = Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=4),
                  cache_len=128, prompt_len=64, prefix_caching=caching,
-                 prefill_chunk_tokens=chunk, record_tokens=True)
+                 prefill_chunk_tokens=chunk, record_tokens=True,
+                 paged=False)
     eng.submit([Request(0, shared + " donor tail", 0.0, 49, 4)])
     eng.run()
     eng.submit([Request(10 + i, shared + " " + _words(8, f"u{i}"), 0.0, 49,
