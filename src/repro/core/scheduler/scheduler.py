@@ -113,6 +113,24 @@ class Scheduler:
         self.running.extend(admitted)
         return admitted
 
+    def add_admit_gate(self, gate: Callable[[Request], bool]) -> None:
+        """Compose an extra admission predicate with the installed
+        ``admit_hook``. Admission then requires every gate *and* the base
+        hook to accept; a gate returning False keeps the request in W this
+        cycle, exactly like the hook itself. Gates added later run FIRST —
+        cheap predicates evaluate before the serving core's hook reserves
+        KV blocks, so a gate rejection can never leak a reservation. This
+        is how a front-end above the core (the multi-replica router) vetoes
+        or observes per-replica admissions through the same admission path
+        instead of inventing a second gate mechanism."""
+        base = self.admit_hook
+        if base is None:
+            self.admit_hook = gate
+        else:
+            def chained(r: Request, _gate=gate, _base=base) -> bool:
+                return _gate(r) and _base(r)
+            self.admit_hook = chained
+
     def defer(self, reqs: List[Request]) -> None:
         """Return admitted-but-unplaceable requests to the head of W (engine
         back-pressure through the scheduler API, not queue surgery). The

@@ -1,9 +1,13 @@
 """Serving runtime: unified ServingCore loop, real JAX backend, discrete-event
-simulator backend, KV accounting."""
+simulator backend, KV accounting, multi-replica router front-end."""
 from repro.serving.core import (PrefillChunk, ServingCore, VirtualClock,
                                 WallClock)
 from repro.serving.engine import Engine, RealBackend, serve
 from repro.serving.kv_cache import BlockAllocator, prefix_chunk_hashes
-from repro.serving.metrics import LatencyReport, itl_samples, report
+from repro.serving.metrics import (LatencyReport, RouterReport, itl_samples,
+                                   report, router_report)
+from repro.serving.router import (ROUTING_POLICIES, ReplicaRouter,
+                                  score_predicted_len)
 from repro.serving.sampler import SamplerConfig, sample
-from repro.serving.simulator import CostModel, SimBackend, run_policy, simulate
+from repro.serving.simulator import (CostModel, SimBackend, make_sim_replicas,
+                                     run_policy, simulate, simulate_replicas)

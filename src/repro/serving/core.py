@@ -45,8 +45,12 @@ The hit is capped at ``prefill_target - 1`` tokens: the final prompt
 position is always recomputed so the backend has logits to emit the first
 output token from (vLLM does the same on a full-prompt hit).
 
-New serving behavior (multi-replica dispatch, …) lands here once and both
-modes inherit it.
+New serving behavior lands here once and both modes inherit it — the
+multi-replica front-end (:class:`~repro.serving.router.ReplicaRouter`)
+drives N of these cores through :meth:`ServingCore.tick` and the router
+probes (``queue_depth`` / ``kv_pressure`` / ``predicted_remaining_tokens``
+/ ``prefix_affinity_blocks`` / ``next_event_time``) without touching the
+loop itself.
 """
 from __future__ import annotations
 
@@ -57,7 +61,8 @@ from typing import (Callable, Deque, Dict, List, Optional, Protocol, Sequence,
 
 from repro.core.scheduler.request import Request, RequestState
 from repro.core.scheduler.scheduler import Scheduler
-from repro.serving.kv_cache import BlockAllocator, prefix_chunk_hashes
+from repro.serving.kv_cache import (UNBOUNDED_BLOCKS, BlockAllocator,
+                                    prefix_chunk_hashes)
 
 # One planned unit of prefill work: (request, start, end) in the backend's
 # prompt-token space — prefill prompt tokens [start, end) of this request.
@@ -216,6 +221,71 @@ class ServingCore:
         """True once a request's whole prompt is KV-resident (it may join
         the decode batch). Backends use this to filter ``running``."""
         return req.prefilled_tokens >= self._target(req)
+
+    # -------------------------------------------------------- router probes
+    # Read-only observations a multi-replica front-end routes by. None of
+    # them mutate request or allocator state: a probed request may well be
+    # routed to a different replica.
+    def queue_depth(self) -> int:
+        """Unfinished requests this core is responsible for: routed but not
+        yet arrived, waiting, and running."""
+        return (len(self._pending) + len(self.scheduler.waiting)
+                + len(self.scheduler.running))
+
+    def kv_used_blocks(self) -> int:
+        """Distinct KV blocks currently referenced (shared blocks once)."""
+        return self.allocator.used_blocks
+
+    def kv_pressure(self) -> float:
+        """Referenced fraction of the KV budget, in [0, 1]. Unbounded
+        allocators report 0.0 — rank those replicas by
+        :meth:`kv_used_blocks` instead."""
+        if self.allocator.total_blocks >= UNBOUNDED_BLOCKS:
+            return 0.0
+        return self.allocator.used_blocks / self.allocator.total_blocks
+
+    def predicted_remaining_tokens(
+            self, predicted_len: Callable[[Request], float]) -> float:
+        """Predicted tokens of work left on this core: for every unfinished
+        request it owns, the prompt tokens still to prefill plus
+        ``max(predicted_len(req) - tokens_done, 0)`` predicted decode
+        tokens. The router's ``predicted_shortest_queue`` policy sums PARS
+        scores through this (``predicted_len`` maps a request to its
+        predicted output length — typically ``req.score``)."""
+        total = 0.0
+        for r in (*self._pending, *self.scheduler.waiting,
+                  *self.scheduler.running):
+            target = (r.prefill_target if r.prefill_target is not None
+                      else self.backend.prefill_total(r))
+            total += max(target - r.prefilled_tokens, 0)
+            total += max(float(predicted_len(r)) - r.tokens_done, 0.0)
+        return total
+
+    def prefix_affinity_blocks(self, req: Request) -> int:
+        """Committed cached blocks this core could share for ``req``'s
+        prompt right now — the router's cache-affinity probe. 0 when prefix
+        caching is off. Deliberately unmemoized (unlike
+        :meth:`_prefix_hashes`): the request may be routed elsewhere, and a
+        stale memo entry on a non-chosen replica would never be reclaimed."""
+        if not self.prefix_caching:
+            return 0
+        chain = prefix_chunk_hashes(self.backend.prefix_tokens(req),
+                                    self.allocator.block_size)
+        cap = (max(self.backend.prefill_total(req) - 1, 0)
+               // self.allocator.block_size)
+        return self.allocator.cached_prefix_blocks(chain[:cap])
+
+    def next_event_time(self) -> float:
+        """When this core next has something to do, in its clock's
+        timebase: now if scheduled work exists, the first pending arrival
+        otherwise, ``+inf`` when fully drained. The router advances the
+        replica with the earliest next event (discrete-event order across
+        replicas)."""
+        if self.scheduler.has_work:
+            return self.clock.now()
+        if self._pending:
+            return max(self.clock.now(), self._pending[0].arrival_time)
+        return float("inf")
 
     def _target(self, req: Request) -> int:
         """The request's frozen prefill total: snapshotted at admission so a
@@ -415,6 +485,73 @@ class ServingCore:
             self._retire(now)
         return now
 
+    def tick(self, *,
+             on_step: Optional[Callable[["ServingCore", float], None]] = None,
+             ) -> Optional[float]:
+        """One run-loop iteration — the step-one-replica API.
+
+        Delivers due arrivals from the pending deque, takes one serving
+        :meth:`step` if there is scheduled work (or fast-forwards the clock
+        to the next arrival if not), and returns the core's clock time
+        afterwards — ``None`` when the core is fully drained. ``run()`` is a
+        loop over this; the multi-replica router interleaves ``tick()``
+        calls across replicas instead, so a front-end drives N cores
+        without duplicating any of the loop's arrival/progress semantics.
+
+        Raises ``MemoryError`` when the core is wedged: the KV gate rejects
+        every waiting request, nothing is executing, and no future arrival
+        exists that could drain first (admission depends only on allocator
+        state, so a wedge with an empty pending deque is permanent)."""
+        if not (self._pending or self.scheduler.has_work):
+            return None
+        now = self.clock.now()
+        arrived = []
+        while self._pending and self._pending[0].arrival_time <= now:
+            arrived.append(self._pending.popleft())
+        if arrived:
+            self.scheduler.add_requests(arrived)
+        if not self.scheduler.has_work:
+            self.clock.wait_until(self._pending[0].arrival_time)
+            return self.clock.now()
+        running_before = bool(self.scheduler.running)
+        finished_before = len(self.finished)
+        new_now = self.step(now)
+        if on_step is not None:
+            on_step(self, new_now)
+        progressed = (new_now != now or running_before
+                      or self.scheduler.running
+                      or len(self.finished) > finished_before)
+        if not progressed:
+            # KV gate rejected everything and nothing is executing
+            if self._pending:
+                self.clock.wait_until(self._pending[0].arrival_time)
+                return self.clock.now()
+
+            # effective demand: blocks a request must newly claim, after
+            # subtracting the cached-prefix blocks it would share — with
+            # caching on, the cheapest-to-admit request is the one with
+            # the smallest *non-shared* footprint, not the smallest
+            # prompt (its full demand may exceed what admission needs)
+            def _new_blocks(r: Request) -> int:
+                return (self.allocator.blocks_for(self._admission_need(r))
+                        - self.allocator.cached_prefix_blocks(
+                            self._prefix_hashes(r)))
+            smallest = min(self.scheduler.waiting, key=_new_blocks)
+            tokens = self._admission_need(smallest)
+            shared = self.allocator.cached_prefix_blocks(
+                self._prefix_hashes(smallest))
+            cached_note = (f" ({shared} reusable from the prefix cache)"
+                           if shared else "")
+            raise MemoryError(
+                f"KV budget can never admit remaining requests: request "
+                f"{smallest.req_id} has the smallest demand, "
+                f"{tokens} tokens = {self.allocator.blocks_for(tokens)} "
+                f"blocks of {self.allocator.block_size}{cached_note}, "
+                f"but the cache only has {self.allocator.total_blocks} "
+                f"blocks ({self.allocator.free_blocks} free)")
+        self.clock.wait_until(new_now)
+        return new_now
+
     def run(self, *, max_time: float = float("inf"), log_every: float = 0.0,
             log_fn=print,
             on_step: Optional[Callable[["ServingCore", float], None]] = None,
@@ -428,53 +565,11 @@ class ServingCore:
         total = len(self._pending) + len(self.finished) + \
             len(self.scheduler.waiting) + len(self.scheduler.running)
         while self._pending or self.scheduler.has_work:
-            now = self.clock.now()
-            if now >= max_time:
+            if self.clock.now() >= max_time:
                 break
-            arrived = []
-            while self._pending and self._pending[0].arrival_time <= now:
-                arrived.append(self._pending.popleft())
-            if arrived:
-                self.scheduler.add_requests(arrived)
-            if not self.scheduler.has_work:
-                self.clock.wait_until(self._pending[0].arrival_time)
-                continue
-            running_before = bool(self.scheduler.running)
-            finished_before = len(self.finished)
-            new_now = self.step(now)
-            if on_step is not None:
-                on_step(self, new_now)
-            progressed = (new_now != now or running_before
-                          or self.scheduler.running
-                          or len(self.finished) > finished_before)
-            if not progressed:
-                # KV gate rejected everything and nothing is executing
-                if self._pending:
-                    self.clock.wait_until(self._pending[0].arrival_time)
-                    continue
-                # effective demand: blocks a request must newly claim, after
-                # subtracting the cached-prefix blocks it would share — with
-                # caching on, the cheapest-to-admit request is the one with
-                # the smallest *non-shared* footprint, not the smallest
-                # prompt (its full demand may exceed what admission needs)
-                def _new_blocks(r: Request) -> int:
-                    return (self.allocator.blocks_for(self._admission_need(r))
-                            - self.allocator.cached_prefix_blocks(
-                                self._prefix_hashes(r)))
-                smallest = min(self.scheduler.waiting, key=_new_blocks)
-                tokens = self._admission_need(smallest)
-                shared = self.allocator.cached_prefix_blocks(
-                    self._prefix_hashes(smallest))
-                cached_note = (f" ({shared} reusable from the prefix cache)"
-                               if shared else "")
-                raise MemoryError(
-                    f"KV budget can never admit remaining requests: request "
-                    f"{smallest.req_id} has the smallest demand, "
-                    f"{tokens} tokens = {self.allocator.blocks_for(tokens)} "
-                    f"blocks of {self.allocator.block_size}{cached_note}, "
-                    f"but the cache only has {self.allocator.total_blocks} "
-                    f"blocks ({self.allocator.free_blocks} free)")
-            self.clock.wait_until(new_now)
+            new_now = self.tick(on_step=on_step)
+            if new_now is None:
+                break
             if log_every and new_now - last_log > log_every:
                 last_log = new_now
                 log_fn(f"[core t={new_now:8.2f}s] "

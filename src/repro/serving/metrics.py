@@ -11,11 +11,20 @@ the two latency axes chunked prefill trades between:
 ITL percentiles come from actual per-token gaps when the run recorded
 ``Request.token_times`` (``record_token_times=True`` on the core), and fall
 back to each request's mean gap (finish − first_token)/(n − 1) otherwise.
+
+Multi-replica runs aggregate through :func:`router_report`: one pooled
+``LatencyReport`` over every replica's finished requests plus per-replica
+reports and router-level signals (load imbalance, cross-replica
+prefix-hit rate, routed TTFT). Aggregation is NaN-safe for replicas that
+served zero requests — empty replicas contribute all-NaN per-replica rows
+and are excluded from imbalance means; they never poison the pooled
+aggregate (which is computed from the pooled request list, not by
+averaging per-replica summaries).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
@@ -85,11 +94,16 @@ def itl_samples(finished: Sequence[Request]) -> np.ndarray:
 
 def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
     if not finished:
+        # every field NaN, including makespan/throughput: a replica that
+        # served nothing has no makespan, and a literal 0.0 would skew
+        # cross-replica min/mean comparisons the router report makes
+        # (NaN means "absent" everywhere else in this report)
         return LatencyReport(policy=policy, n_requests=0,
                              avg_per_token_latency=float("nan"),
                              p90_per_token_latency=float("nan"),
-                             avg_ttft=float("nan"), makespan=0.0,
-                             throughput_tok_s=0.0, mean_wait=float("nan"))
+                             avg_ttft=float("nan"), makespan=float("nan"),
+                             throughput_tok_s=float("nan"),
+                             mean_wait=float("nan"))
     per_tok = np.array([r.per_token_latency() for r in finished])
     ttft = np.array([(r.first_token_time - r.arrival_time) for r in finished
                      if r.first_token_time is not None])
@@ -122,4 +136,84 @@ def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
         else float("nan"),
         grow_failures=float(growf.sum()) if len(growf) else float("nan"),
         grow_preemptions=float(growp.sum()) if len(growp) else float("nan"),
+    )
+
+
+# --------------------------------------------------------------- multi-replica
+@dataclass(frozen=True)
+class RouterReport:
+    """Aggregate + per-replica view of one multi-replica routed run.
+
+    ``aggregate`` is a :class:`LatencyReport` over the *pooled* finished
+    requests of every replica (so its means/percentiles are request-weighted,
+    never averages of per-replica summaries — an empty replica cannot poison
+    them with NaN). ``per_replica[i]`` is replica *i*'s own report; replicas
+    that served nothing report all-NaN rows, by the same "NaN means absent"
+    convention the latency report uses.
+    """
+    policy: str                            # routing policy name
+    n_replicas: int
+    n_requests: int                        # pooled finished count
+    aggregate: LatencyReport
+    per_replica: Tuple[LatencyReport, ...]
+    requests_per_replica: Tuple[int, ...]
+    tokens_per_replica: Tuple[int, ...]    # generated tokens per replica
+    # max/mean served requests per *serving* replica (1.0 = perfectly even;
+    # NaN when nothing finished anywhere). Replicas that served zero requests
+    # still count in the mean — an idle replica IS imbalance.
+    load_imbalance: float
+    token_imbalance: float                 # same ratio over generated tokens
+    # Prefix-cache affinity signal: pooled hit rate across replicas (NaN when
+    # caching was off everywhere) — the number cache-affinity routing moves.
+    cross_replica_hit_rate: float
+    routed_ttft_mean_s: float              # arrival → first token, pooled
+    routed_ttft_p99_s: float
+    # Router-level admission-gate traffic per replica (attempts include
+    # KV-gate deferrals re-tried on later cycles); () when the run did not
+    # go through a router that counts them.
+    admit_attempts: Tuple[int, ...] = ()
+
+    def row(self) -> str:
+        return (f"{self.policy:24s} n={self.n_requests:6d} "
+                f"ttft={self.routed_ttft_mean_s * 1e3:9.2f} ms  "
+                f"hit_rate={self.cross_replica_hit_rate:5.2f}  "
+                f"imbalance={self.load_imbalance:5.2f}  "
+                f"per_replica={list(self.requests_per_replica)}")
+
+
+def _imbalance(counts: Sequence[int]) -> float:
+    """max/mean of per-replica counts; NaN when every replica is empty (no
+    load to be imbalanced about — 0/0 must not warn or crash)."""
+    total = sum(counts)
+    if not counts or total == 0:
+        return float("nan")
+    return max(counts) / (total / len(counts))
+
+
+def router_report(policy: str,
+                  per_replica_finished: Sequence[Sequence[Request]],
+                  admit_attempts: Sequence[int] = ()) -> RouterReport:
+    """NaN-safe aggregation of N replicas' finished requests (any of which
+    may be empty) into one :class:`RouterReport`."""
+    pooled = [r for fin in per_replica_finished for r in fin]
+    agg = report(policy, pooled)
+    per = tuple(report(f"{policy}/r{i}", fin)
+                for i, fin in enumerate(per_replica_finished))
+    counts = tuple(len(fin) for fin in per_replica_finished)
+    tokens = tuple(sum(r.true_length for r in fin)
+                   for fin in per_replica_finished)
+    return RouterReport(
+        policy=policy,
+        n_replicas=len(per_replica_finished),
+        n_requests=len(pooled),
+        aggregate=agg,
+        per_replica=per,
+        requests_per_replica=counts,
+        tokens_per_replica=tokens,
+        load_imbalance=_imbalance(counts),
+        token_imbalance=_imbalance(tokens),
+        cross_replica_hit_rate=agg.prefix_hit_rate,
+        routed_ttft_mean_s=agg.avg_ttft,
+        routed_ttft_p99_s=agg.p99_ttft,
+        admit_attempts=tuple(admit_attempts),
     )

@@ -1,0 +1,221 @@
+"""Multi-replica front-end: predictor-aware, cache-affinity request routing.
+
+One engine replica saturates long before "heavy traffic from millions of
+users" does; the production shape is N data-parallel replicas behind one
+front-end. :class:`ReplicaRouter` is that front-end: it owns the global
+arrival queue and dispatches each request to one of N per-replica
+:class:`~repro.serving.core.ServingCore` loops (Real or Sim backends — the
+router never looks past the core's probe API). Routing reuses the same PARS
+signal the in-replica scheduler ranks by, one level up:
+
+* ``round_robin`` — cycle replicas in index order (the baseline every other
+  policy is judged against).
+* ``least_kv_pressure`` — the replica with the lowest referenced fraction of
+  its KV budget (``ServingCore.kv_pressure``; absolute ``kv_used_blocks``
+  breaks ties, so unbounded sim allocators still rank by load), then the
+  shallowest queue.
+* ``predicted_shortest_queue`` — the replica with the least *predicted
+  remaining work*: for every unfinished request a replica owns, prompt
+  tokens still to prefill plus ``max(predicted_len(r) − tokens_done, 0)``
+  predicted decode tokens (``ServingCore.predicted_remaining_tokens``).
+  ``predicted_len`` defaults to the PARS score annotated on the request —
+  the ELIS-style dispatch-by-predicted-remaining-work rule applied across
+  replicas instead of within one queue.
+* ``prefix_affinity`` — the replica whose allocator already holds the
+  longest *committed* chain-hash prefix of the request's prompt
+  (``ServingCore.prefix_affinity_blocks``), so shared system prompts keep
+  hitting the same replica's prefix cache instead of re-prefilling N times;
+  replicas tie at zero affinity fall back to the ``least_kv_pressure``
+  ordering. This is cross-replica cache *sharing* done as cache-aware
+  routing — no KV bytes ever migrate between replicas.
+
+Every choice is deterministic: metric policies take the per-replica argmin
+of an explicit key tuple (lists indexed in replica order — no set/dict
+iteration anywhere), and exact ties are broken by a ``random.Random(seed)``
+owned by the router, so a fixed trace + fixed policy reproduces the same
+assignment sequence run over run.
+
+**Event order across replicas.** Each replica keeps its own clock (virtual
+or wall). The router advances whichever replica has the earliest
+``next_event_time()`` one :meth:`~repro.serving.core.ServingCore.tick` at a
+time, and routes a pending arrival only once every replica's next event is
+at-or-past its arrival time — the discrete-event guarantee that routing
+probes observe replica state *as of the arrival*, not as of whenever the
+trace was submitted. With one replica this reduces exactly to the core's
+own ``run()`` loop (the N=1 parity tests assert bit-identical outputs and
+equal metrics against a bare ``ServingCore``).
+
+**Admission stays the replica's.** Routing hands a request to a replica's
+pending queue; actually entering that replica's running batch still goes
+through its scheduler's ``admit_hook`` KV gate. The router composes a
+per-replica gate onto that same hook (``Scheduler.add_admit_gate``) to
+count admission attempts — the congestion signal reported per replica —
+rather than inventing a parallel admission mechanism.
+"""
+from __future__ import annotations
+
+import random
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.scheduler.request import Request
+from repro.serving.core import ServingCore
+from repro.serving.metrics import RouterReport, router_report
+
+ROUTING_POLICIES = ("round_robin", "least_kv_pressure",
+                    "predicted_shortest_queue", "prefix_affinity")
+
+
+def score_predicted_len(req: Request) -> float:
+    """Default predicted output length: the PARS score the scheduling policy
+    annotated at arrival, clipped at 0 (scores are relative ranks, so an
+    unannotated request predicts zero remaining decode tokens and routes by
+    prefill work + queue size alone)."""
+    return max(req.score, 0.0)
+
+
+class ReplicaRouter:
+    """Front-end dispatcher over N independent ``ServingCore`` replicas.
+
+    ``replicas`` — already-constructed cores (own scheduler, allocator,
+    backend, clock each; nothing is shared between them).
+    ``policy`` — one of :data:`ROUTING_POLICIES`.
+    ``predicted_len`` — request → predicted output length, used by
+    ``predicted_shortest_queue`` (default: the request's PARS ``score``).
+    ``seed`` — seeds the tie-break RNG, making exact-tie choices
+    reproducible run over run.
+    """
+
+    def __init__(self, replicas: Sequence[ServingCore], *,
+                 policy: str = "round_robin",
+                 predicted_len: Optional[Callable[[Request], float]] = None,
+                 seed: int = 0) -> None:
+        if policy not in ROUTING_POLICIES:
+            raise ValueError(f"policy must be one of {ROUTING_POLICIES}, "
+                             f"got {policy!r}")
+        if not replicas:
+            raise ValueError("need at least one replica")
+        self.replicas: List[ServingCore] = list(replicas)
+        self.policy = policy
+        self.predicted_len = predicted_len or score_predicted_len
+        self._rng = random.Random(seed)
+        self._pending: Deque[Request] = deque()
+        self._rr_next = 0
+        # req_id -> replica index, and the dispatch-ordered log the
+        # determinism tests compare run over run
+        self.assignments: Dict[int, int] = {}
+        self.assignment_log: List[Tuple[int, int]] = []
+        self.admit_attempts: List[int] = [0] * len(self.replicas)
+        for i, core in enumerate(self.replicas):
+            core.scheduler.add_admit_gate(self._admit_gate(i))
+
+    def _admit_gate(self, idx: int) -> Callable[[Request], bool]:
+        """Observer gate composed onto replica ``idx``'s admit_hook: counts
+        every admission attempt (deferral pressure shows up as attempts ≫
+        served requests) without ever vetoing one."""
+        def gate(_req: Request) -> bool:
+            self.admit_attempts[idx] += 1
+            return True
+        return gate
+
+    # --------------------------------------------------------------- routing
+    def submit(self, requests: Sequence[Request]) -> None:
+        """Queue arrivals on the global front-end queue (merged by arrival
+        time, same convention as ``ServingCore.submit``)."""
+        self._pending = deque(sorted([*self._pending, *requests],
+                                     key=lambda r: r.arrival_time))
+
+    def _keys(self, req: Request) -> List[Tuple]:
+        """Per-replica routing key for the configured policy (lower =
+        better), indexed in replica order."""
+        if self.policy == "least_kv_pressure":
+            return [(c.kv_pressure(), c.kv_used_blocks(), c.queue_depth())
+                    for c in self.replicas]
+        if self.policy == "predicted_shortest_queue":
+            return [(c.predicted_remaining_tokens(self.predicted_len),
+                     c.queue_depth()) for c in self.replicas]
+        if self.policy == "prefix_affinity":
+            # longest committed prefix wins; zero-affinity replicas compare
+            # by exactly the least_kv_pressure ordering (the fallback)
+            return [(-c.prefix_affinity_blocks(req), c.kv_pressure(),
+                     c.kv_used_blocks(), c.queue_depth())
+                    for c in self.replicas]
+        raise AssertionError(self.policy)
+
+    def choose(self, req: Request) -> int:
+        """Pick the replica for one request. ``round_robin`` cycles; metric
+        policies take the argmin of :meth:`_keys`, exact ties broken by the
+        seeded RNG (never by iteration order of anything unordered)."""
+        if self.policy == "round_robin":
+            idx = self._rr_next
+            self._rr_next = (self._rr_next + 1) % len(self.replicas)
+            return idx
+        keys = self._keys(req)
+        best = min(keys)
+        tied = [i for i, k in enumerate(keys) if k == best]
+        return tied[0] if len(tied) == 1 else self._rng.choice(tied)
+
+    def dispatch(self, req: Request) -> int:
+        """Route one request now: record the assignment and hand it to the
+        chosen replica's pending queue (its own arrival/admission machinery
+        takes over from there)."""
+        idx = self.choose(req)
+        self.assignments[req.req_id] = idx
+        self.assignment_log.append((req.req_id, idx))
+        self.replicas[idx].submit([req])
+        return idx
+
+    # ------------------------------------------------------------ event loop
+    def _next_replica(self) -> Optional[int]:
+        """The replica to advance next: earliest ``next_event_time``, ties to
+        the lowest index (replica-list order — deterministic). ``None`` when
+        every replica is drained."""
+        best, best_t = None, float("inf")
+        for i, core in enumerate(self.replicas):
+            t = core.next_event_time()
+            if t < best_t:
+                best, best_t = i, t
+        return best
+
+    def step(self) -> bool:
+        """One global event: route the next due arrival, or advance the
+        earliest replica one serving cycle. Returns False when fully
+        drained. An arrival is routed only once no replica's next event
+        precedes it, so routing probes see replica state as of the arrival
+        time (the discrete-event analogue of routing at arrival)."""
+        idx = self._next_replica()
+        t_core = (self.replicas[idx].next_event_time()
+                  if idx is not None else float("inf"))
+        if self._pending and self._pending[0].arrival_time <= t_core:
+            self.dispatch(self._pending.popleft())
+            return True
+        if idx is None:
+            return False
+        self.replicas[idx].tick()
+        return True
+
+    def run(self, *, max_steps: Optional[int] = None) -> List[Request]:
+        """Drive routing + every replica to completion; returns all finished
+        requests (sorted by req_id). ``max_steps`` bounds the global event
+        count (property tests interleave bounded runs with invariant
+        checks)."""
+        steps = 0
+        while self.step():
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return self.finished
+
+    # --------------------------------------------------------------- results
+    @property
+    def finished(self) -> List[Request]:
+        out = [r for core in self.replicas for r in core.finished]
+        out.sort(key=lambda r: r.req_id)
+        return out
+
+    def report(self, label: Optional[str] = None) -> RouterReport:
+        """Aggregate + per-replica metrics for everything finished so far
+        (NaN-safe when some replica served nothing)."""
+        return router_report(label or self.policy,
+                             [core.finished for core in self.replicas],
+                             admit_attempts=self.admit_attempts)

@@ -1,0 +1,336 @@
+"""ReplicaRouter layer: single-replica parity (sim + real backends),
+deterministic routing, probe semantics, admit-gate composition, and NaN-safe
+metric aggregation for empty replicas.
+"""
+import dataclasses
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.scheduler.policies import fcfs, oracle_sjf
+from repro.core.scheduler.request import Request
+from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.kv_cache import BlockAllocator
+from repro.serving.core import ServingCore, VirtualClock
+from repro.serving.metrics import report, router_report
+from repro.serving.router import ROUTING_POLICIES, ReplicaRouter
+from repro.serving.simulator import (CostModel, SimBackend, make_sim_replicas,
+                                     simulate, simulate_replicas)
+
+
+def _words(n, tag):
+    return " ".join(f"{tag}w{j}" for j in range(n))
+
+
+def _trace(n=28, seed=0, families=3, shared_words=40, out_skew=False):
+    """Shared-system-prompt trace: ``families`` prompt families sharing a
+    ``shared_words``-word prefix, unique per-request tails, PARS score set
+    to the true output length (a perfect predictor stand-in)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        fam = int(rng.integers(families))
+        prompt = _words(shared_words, f"sys{fam}") + " " + _words(6, f"u{i}")
+        out = int(rng.choice([4, 40], p=[0.8, 0.2])) if out_skew \
+            else 3 + i % 5
+        r = Request(i, prompt, float(i) * 0.07, shared_words + 6, out)
+        r.score = float(out)
+        reqs.append(r)
+    return reqs
+
+
+def _copy(reqs):
+    out = []
+    for r in reqs:
+        c = Request(r.req_id, r.prompt, r.arrival_time, r.prompt_len,
+                    r.true_length)
+        c.score = r.score
+        out.append(c)
+    return out
+
+
+def _per_request(finished):
+    return {r.req_id: (r.start_time, r.first_token_time, r.finish_time,
+                       r.tokens_done, r.cached_prefix_tokens)
+            for r in finished}
+
+
+def _assert_reports_equal(a, b):
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, float) and math.isnan(va):
+            assert isinstance(vb, float) and math.isnan(vb), f.name
+        else:
+            assert va == vb, (f.name, va, vb)
+
+
+# ------------------------------------------------------------ N=1 parity (sim)
+@pytest.mark.parametrize("routing", ROUTING_POLICIES)
+def test_single_replica_sim_parity(routing):
+    """A one-replica router must be an observable no-op versus a bare
+    ServingCore run: identical per-request timestamps and equal metrics,
+    whatever the routing policy."""
+    kw = dict(kv_blocks=64, block_size=16, prefill_chunk_tokens=64,
+              prefix_caching=True)
+    bare = simulate(_copy(_trace()), Scheduler(policy=fcfs(), max_batch=8),
+                    **kw)
+    router = simulate_replicas(_copy(_trace()), n_replicas=1,
+                               policy_factory=fcfs, routing=routing,
+                               max_batch=8, **kw)
+    assert _per_request(router.finished) == _per_request(bare)
+    _assert_reports_equal(report("parity", bare),
+                          report("parity", router.finished))
+    assert all(idx == 0 for _rid, idx in router.assignment_log)
+
+
+def test_single_replica_sim_parity_incremental():
+    """Parity must also hold when the tight incremental-reservation budget
+    forces grow failures and recompute preemptions inside the replica."""
+    trace = _trace(n=20, out_skew=True)
+    kw = dict(kv_blocks=12, block_size=16, kv_reservation="incremental")
+    bare = simulate(_copy(trace), Scheduler(policy=fcfs(), max_batch=8), **kw)
+    router = simulate_replicas(_copy(trace), n_replicas=1,
+                               policy_factory=fcfs,
+                               routing="predicted_shortest_queue",
+                               max_batch=8, **kw)
+    assert _per_request(router.finished) == _per_request(bare)
+    rep = report("x", bare)
+    assert rep.grow_preemptions > 0      # the stress actually fired
+    _assert_reports_equal(rep, report("x", router.finished))
+
+
+# ----------------------------------------------------------- N=1 parity (real)
+def test_single_replica_real_parity(setup_real):
+    """Real backend: wrapping an Engine's core in a one-replica router must
+    reproduce the bare run's greedy tokens bit-identically."""
+    cfg, params = setup_real
+
+    def build():
+        from repro.serving.engine import Engine
+        return Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=4),
+                      cache_len=96, prompt_len=32, prefix_caching=True,
+                      record_tokens=True)
+
+    def reqs():
+        shared = _words(24, "sys")
+        return [Request(i, shared + " " + _words(4, f"u{i}"), 0.0, 30, 3 + i)
+                for i in range(4)]
+
+    eng1 = build()
+    eng1.submit(reqs())
+    bare = {r.req_id: r.generated_tokens for r in eng1.run()}
+
+    eng2 = build()
+    router = ReplicaRouter([eng2.core], policy="prefix_affinity")
+    router.submit(reqs())
+    routed = {r.req_id: r.generated_tokens for r in router.run()}
+    assert routed == bare
+    assert eng2.allocator.used_blocks == 0
+
+
+@pytest.fixture(scope="module")
+def setup_real():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as tfm
+
+    cfg = get_smoke_config("llama3_2_3b").replace(dtype="float32",
+                                                  vocab_size=2048)
+    return cfg, tfm.init_params(jax.random.PRNGKey(0), cfg)
+
+
+# ------------------------------------------------------- deterministic routing
+@pytest.mark.parametrize("routing", ROUTING_POLICIES)
+def test_fixed_trace_routing_is_deterministic(routing):
+    """Fixed trace + fixed policy ⇒ identical replica-assignment sequence
+    and identical per-request timings across runs."""
+    runs = []
+    for _ in range(2):
+        router = simulate_replicas(
+            _copy(_trace(n=40, families=4)), n_replicas=3,
+            policy_factory=oracle_sjf, routing=routing, seed=3,
+            kv_blocks=48, block_size=16, max_batch=4,
+            prefill_chunk_tokens=64, prefix_caching=True)
+        runs.append((list(router.assignment_log),
+                     _per_request(router.finished)))
+    assert runs[0] == runs[1]
+    assert len(runs[0][0]) == 40         # every request routed exactly once
+
+
+def test_deterministic_under_grow_preemption():
+    """Determinism must survive the incremental-reservation preemption path:
+    grow denials evict mid-decode, probes see the churn, and the assignment
+    sequence still reproduces exactly."""
+    trace = _trace(n=30, out_skew=True, seed=5)
+    runs = []
+    for _ in range(2):
+        router = simulate_replicas(
+            _copy(trace), n_replicas=2, policy_factory=fcfs,
+            routing="least_kv_pressure", seed=1,
+            kv_blocks=10, block_size=16, max_batch=6,
+            kv_reservation="incremental")
+        rep = router.report()
+        runs.append((list(router.assignment_log),
+                     _per_request(router.finished)))
+        assert rep.aggregate.grow_preemptions > 0
+    assert runs[0] == runs[1]
+
+
+# ------------------------------------------------------------------- probes
+def _one_core(**kw):
+    kw.setdefault("kv_blocks", 16)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("prefix_caching", True)
+    return make_sim_replicas(1, fcfs, **kw)[0]
+
+
+def test_probe_queue_depth_counts_pending_and_queued():
+    core = _one_core()
+    core.submit([Request(0, _words(8, "a"), 0.0, 8, 2),
+                 Request(1, _words(8, "b"), 5.0, 8, 2)])
+    assert core.queue_depth() == 2       # both pending count, even future ones
+    core.run()
+    assert core.queue_depth() == 0
+
+
+def test_probe_kv_pressure_bounded_and_unbounded():
+    core = _one_core(kv_blocks=16, block_size=4)
+    assert core.kv_pressure() == 0.0 and core.kv_used_blocks() == 0
+    core.allocator.allocate(0, 12)               # 12 tokens = 3 blocks of 4
+    assert core.kv_used_blocks() == 3
+    assert core.kv_pressure() == pytest.approx(3 / 16)
+    core.allocator.free(0)
+    # unbounded allocators report zero pressure but still expose used blocks
+    unb = _one_core(kv_blocks=None, block_size=4)
+    unb.allocator.allocate(1, 20)                # 5 blocks
+    assert unb.kv_pressure() == 0.0 and unb.kv_used_blocks() == 5
+    unb.allocator.free(1)
+
+
+def test_probe_predicted_remaining_tokens():
+    core = _one_core()
+    r = Request(0, _words(10, "a"), 3.0, 10, 4)
+    r.score = 7.0
+    core.submit([r])
+    # nothing prefilled, nothing decoded: prompt + predicted output
+    assert core.predicted_remaining_tokens(lambda q: q.score) \
+        == pytest.approx(10 + 7)
+    core.run()
+    assert core.predicted_remaining_tokens(lambda q: q.score) == 0.0
+
+
+def test_probe_prefix_affinity_sees_committed_blocks_only():
+    shared = _words(12, "sys")                  # 12 tokens = 3 blocks of 4
+    core = _one_core()
+    probe = Request(7, shared + " " + _words(4, "u7"), 0.0, 16, 2)
+    assert core.prefix_affinity_blocks(probe) == 0
+    core.submit([Request(0, shared + " " + _words(4, "u0"), 0.0, 16, 2)])
+    core.run()
+    # donor retired: its committed prefix blocks persist in the LRU pool and
+    # the probe sees every whole shared block (the prompt's last block is
+    # never counted — a full-prompt hit would leave nothing to prefill)
+    assert core.prefix_affinity_blocks(probe) == 3
+    # a caching-off replica always reports zero affinity
+    off = _one_core(prefix_caching=False)
+    assert off.prefix_affinity_blocks(probe) == 0
+
+
+def test_probe_next_event_time():
+    core = _one_core()
+    assert core.next_event_time() == float("inf")          # fully drained
+    core.submit([Request(0, _words(8, "a"), 9.0, 8, 2)])
+    assert core.next_event_time() == 9.0                   # next arrival
+    core.tick()                                            # delivers + admits
+    assert core.next_event_time() == core.clock.now()      # work is live
+    core.run()
+    assert core.next_event_time() == float("inf")
+
+
+# ------------------------------------------------------- admit-gate composition
+def test_add_admit_gate_runs_before_reservation():
+    """A later-added gate must run *before* the core's KV-reserve hook, so a
+    gate veto never leaks a block reservation — while an un-vetoed request
+    on the same replica reserves and runs normally. Flipping the gate
+    admits the held request through the unchanged base hook."""
+    core = _one_core()
+    allow = {"open": False}
+    core.scheduler.add_admit_gate(lambda r: allow["open"] or r.req_id != 0)
+    core.submit([Request(0, _words(8, "a"), 0.0, 8, 6),
+                 Request(1, _words(8, "b"), 0.0, 8, 6)])
+    core.tick()
+    core.tick()
+    assert [r.req_id for r in core.scheduler.waiting] == [0]   # vetoed
+    assert core.allocator.reserved(0) == 0       # veto leaked no reservation
+    assert core.allocator.reserved(1) > 0        # base KV hook still reserves
+    allow["open"] = True
+    core.run()
+    assert len(core.finished) == 2
+    assert core.allocator.used_blocks == 0
+
+
+def test_router_counts_admit_attempts():
+    router = simulate_replicas(_copy(_trace(n=10)), n_replicas=2,
+                               policy_factory=fcfs, routing="round_robin",
+                               kv_blocks=64, block_size=16)
+    assert len(router.finished) == 10
+    # every served request took at least one admission attempt on its replica
+    assert all(a >= c for a, c in zip(router.admit_attempts,
+                                      (5, 5)))
+    assert router.report().admit_attempts == tuple(router.admit_attempts)
+
+
+# -------------------------------------------------------- NaN-safe aggregation
+def _finished_request(rid, out=3):
+    r = Request(rid, "p q r s", float(rid), 4, out)
+    r.start_time = r.arrival_time + 0.1
+    r.first_token_time = r.arrival_time + 0.2
+    r.finish_time = r.arrival_time + 0.2 + 0.05 * out
+    r.tokens_done = out
+    return r
+
+
+def test_report_empty_is_all_nan():
+    rep = report("empty", [])
+    assert rep.n_requests == 0
+    for f in dataclasses.fields(rep):
+        v = getattr(rep, f.name)
+        if isinstance(v, float):
+            assert math.isnan(v), f.name     # includes makespan + throughput
+
+
+def test_router_report_tolerates_empty_replica():
+    served = [_finished_request(i) for i in range(4)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # numpy empty-slice would raise
+        rep = router_report("x", [served, []])
+    assert rep.n_requests == 4 and rep.n_replicas == 2
+    _assert_reports_equal(rep.aggregate, report("x", served))
+    assert rep.requests_per_replica == (4, 0)
+    assert rep.load_imbalance == pytest.approx(2.0)   # all load on one of two
+    assert rep.token_imbalance == pytest.approx(2.0)
+    assert rep.per_replica[1].n_requests == 0
+    assert math.isnan(rep.per_replica[1].avg_ttft)
+    assert math.isfinite(rep.routed_ttft_mean_s)
+    rep.row()                                 # formatting never crashes
+
+
+def test_router_report_all_empty_is_nan_not_crash():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        rep = router_report("x", [[], [], []])
+    assert rep.n_requests == 0
+    assert math.isnan(rep.load_imbalance)
+    assert math.isnan(rep.token_imbalance)
+    assert math.isnan(rep.routed_ttft_mean_s)
+    rep.row()
+
+
+# ---------------------------------------------------------- router validation
+def test_router_rejects_bad_config():
+    with pytest.raises(ValueError):
+        ReplicaRouter([], policy="round_robin")
+    with pytest.raises(ValueError):
+        ReplicaRouter(make_sim_replicas(1, fcfs), policy="nope")

@@ -1,0 +1,148 @@
+"""Property-based router-invariant suite for multi-replica serving.
+
+Randomized arrive / route / step / preempt / retire sequences against a
+:class:`ReplicaRouter` over 1–3 sim replicas (every routing policy, both KV
+reservation modes, prefix caching on, tight budgets) must preserve the
+router's conservation laws at every step:
+
+* **no request lost or duplicated across replicas** — every submitted
+  request lives in exactly one place (router pending, or exactly one
+  replica's pending/waiting/running/finished), and only in the replica it
+  was assigned to;
+* **per-replica KV accounting stays conserved** — each replica's allocator
+  satisfies ``free + used == total`` plus the full refcount/LRU invariant
+  set from the prefix-cache property suite;
+* **every retired request completed on exactly one replica** — at drain,
+  the union of replica ``finished`` lists is exactly the submitted set,
+  each request in its assigned replica, and every allocator is clean.
+
+Runs under real ``hypothesis`` when installed (deterministic bounded "ci"
+profile, override with ``HYPOTHESIS_PROFILE=``) and under the seeded
+fallback shim otherwise — same contract as the prefix-cache suite.
+"""
+import os
+from collections import Counter
+
+from _hypothesis_compat import given, st
+from test_prefix_cache_properties import _check_invariants
+
+from repro.core.scheduler.policies import oracle_sjf
+from repro.core.scheduler.request import Request, RequestState
+from repro.serving.router import ROUTING_POLICIES, ReplicaRouter
+from repro.serving.simulator import make_sim_replicas
+
+try:                                   # fixed profile: bounded + derandomized
+    import hypothesis
+
+    hypothesis.settings.register_profile(
+        "ci", max_examples=60, deadline=None, derandomize=True)
+    hypothesis.settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE",
+                                                    "ci"))
+except ModuleNotFoundError:
+    pass
+
+BS = 4          # allocator block size: small so sharing/eviction fire often
+
+
+def _prompt(variant: int, rid: int) -> str:
+    """Prompt families sharing block-aligned word prefixes (variant % 4
+    shared blocks with the base family), then a per-request unique tail."""
+    shared = (variant % 4) * BS
+    return (" ".join(f"sys{k}" for k in range(shared)) + " " +
+            " ".join(f"u{rid}w{j}" for j in range(8)))
+
+
+def _census(router: ReplicaRouter, submitted: dict) -> None:
+    """The conservation law: each submitted request sits in exactly one
+    container of exactly one owner, and replica containers only ever hold
+    requests assigned to that replica."""
+    locations = Counter()
+    for r in router._pending:
+        locations[r.req_id] += 1
+        # not routed yet: must not carry an assignment
+        assert r.req_id not in router.assignments
+    for i, core in enumerate(router.replicas):
+        for container in (core._pending, core.scheduler.waiting,
+                          core.scheduler.running, core.finished):
+            for r in container:
+                locations[r.req_id] += 1
+                assert router.assignments.get(r.req_id) == i, \
+                    f"req {r.req_id} in replica {i} but assigned " \
+                    f"{router.assignments.get(r.req_id)}"
+    assert locations == Counter({rid: 1 for rid in submitted}), \
+        "request lost or duplicated across replicas"
+    # the dispatch log never double-routes
+    logged = [rid for rid, _ in router.assignment_log]
+    assert len(logged) == len(set(logged))
+
+
+def _force_preempt(core) -> None:
+    """Evict the worst-ranked running block holder back to W — the same
+    recompute eviction the scheduler and the grow-denial path perform —
+    so randomized sequences exercise mid-flight eviction under routing."""
+    pool = [v for v in core.scheduler.running
+            if core.allocator.reserved(v.req_id)]
+    if not pool:
+        return
+    victim = max(pool, key=lambda v: (core.scheduler.policy.key(v), v.req_id))
+    core.scheduler.running.remove(victim)
+    victim.state = RequestState.WAITING
+    victim.preempt_count += 1
+    victim.prefilled_tokens = 0
+    victim.prefill_target = None
+    core.scheduler.evict_hook(victim)
+    core.scheduler.waiting.append(victim)
+
+
+@given(n=st.integers(min_value=1, max_value=3),
+       pol=st.integers(min_value=0, max_value=3),
+       incremental=st.booleans(),
+       budget=st.integers(min_value=8, max_value=20),
+       codes=st.lists(st.integers(min_value=0, max_value=1 << 20),
+                      min_size=1, max_size=120))
+def test_random_routed_lifecycle_preserves_invariants(n, pol, incremental,
+                                                      budget, codes):
+    cores = make_sim_replicas(
+        n, oracle_sjf, kv_blocks=budget, block_size=BS, max_batch=3,
+        prefill_chunk_tokens=6, prefix_caching=True,
+        kv_reservation="incremental" if incremental else "full")
+    router = ReplicaRouter(cores, policy=ROUTING_POLICIES[pol], seed=7)
+    submitted, next_id, t = {}, 0, 0.0
+    for code in codes:
+        op = code % 4
+        if op == 0:                                       # arrive
+            variant = (code >> 2) % 6
+            # demand ≤ (20 + 4) tokens = 6 blocks < the smallest budget, so
+            # a wedged replica is impossible and MemoryError never fires
+            plen = 4 + (code >> 4) % 16
+            out = 1 + (code >> 8) % 4
+            req = Request(next_id, _prompt(variant, next_id), t, plen, out)
+            router.submit([req])
+            submitted[next_id] = req
+            next_id += 1
+            t += 0.05
+        elif op == 1:                                     # one global event
+            router.step()
+        elif op == 2:                                     # a burst of events
+            for _ in range(4):
+                router.step()
+        elif op == 3:                                     # forced preemption
+            _force_preempt(cores[(code >> 2) % n])
+        _census(router, submitted)
+        for core in cores:
+            _check_invariants(core.allocator)
+    router.run()                                          # drain everything
+    # every retired request completed on exactly one replica — its own
+    fin_ids = [r.req_id for core in cores for r in core.finished]
+    assert sorted(fin_ids) == sorted(submitted)
+    for rid, req in submitted.items():
+        owner = router.assignments[rid]
+        assert any(f is req for f in cores[owner].finished)
+        assert req.tokens_done == req.true_length
+    # and every allocator is clean: nothing held after retirement
+    for core in cores:
+        _check_invariants(core.allocator)
+        assert core.allocator.used_blocks == 0
+        assert core.allocator.free_blocks == core.allocator.total_blocks
+        for rid in submitted:
+            assert core.allocator.reserved(rid) == 0
