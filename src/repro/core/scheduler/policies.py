@@ -12,11 +12,23 @@ Every SJF-family policy is "sort the waiting queue by a score, ascending"
 Predictor-backed policies are constructed with a ``RankingPredictor`` (or any
 ``score(prompts) -> array``) and annotate requests once on arrival — scoring
 is O(1) per request at scheduling time (paper: "minimal overhead").
+
+**Annotate vs refresh.** ``annotate`` is the write-once arrival path: score
+every not-yet-scored request in one batched scorer call and never touch it
+again (idempotent — an explicit ``Request.scored`` flag, not a score-value
+sentinel). ``refresh`` is the iterative re-ranking path (ELIS-style, driven
+by the serving core's ``rerank_interval``): re-score the *waiting* queue in
+one batched call (so an online-updated predictor is picked up with zero
+per-request dispatch) and refresh every request's priority key to its
+predicted *remaining* length, ``max(estimate − tokens_done, floor)``, stored
+in ``Request.remaining_est``. Keys read ``remaining_est`` when it has been
+refreshed and fall back to the arrival-time basis otherwise, so a run that
+never calls ``refresh`` behaves exactly as the historical write-once ranker.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Iterable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 from repro.core.scheduler.request import Request
 
@@ -25,21 +37,60 @@ POLICY_NAMES = ("fcfs", "pars", "pars+", "pointwise", "listwise", "oracle")
 
 @dataclass
 class Policy:
-    """Priority-key provider. Lower key = scheduled earlier."""
+    """Priority-key provider. Lower key = scheduled earlier.
+
+    ``estimate`` maps a request to its predicted *total* output length — the
+    basis ``refresh`` turns into a remaining-length key. ``None`` (fcfs)
+    means the policy has no length estimate and ``refresh`` leaves its keys
+    alone.
+    """
     name: str
     key_fn: Callable[[Request], float]
     scorer: Optional[Callable[[Sequence[str]], "object"]] = None
+    estimate: Optional[Callable[[Request], float]] = None
 
     def annotate(self, requests: List[Request]) -> None:
-        """Attach predictor scores to newly arrived requests (batched)."""
+        """Attach predictor scores to newly arrived requests (batched).
+
+        Idempotent: only requests never scored before are sent to the
+        scorer, tracked by ``Request.scored`` — a legitimate score of
+        exactly 0.0 is *not* re-scored on later ``add_requests`` calls.
+        """
         if self.scorer is None:
             return
-        todo = [r for r in requests if r.score == 0.0]
+        todo = [r for r in requests if not r.scored]
         if not todo:
             return
         scores = self.scorer([r.prompt for r in todo])
         for r, s in zip(todo, scores):
             r.score = float(s)
+            r.scored = True
+
+    def refresh(self, running: Sequence[Request], waiting: Sequence[Request],
+                *, floor: float = 0.0) -> int:
+        """One iterative re-rank: refresh priority keys to predicted
+        *remaining* length.
+
+        Waiting requests are re-scored in a single batched scorer call
+        (amortized — never one dispatch per request), then every request in
+        both queues gets ``remaining_est = max(estimate − tokens_done,
+        floor)``. Running requests are *not* re-scored (their prompt hasn't
+        changed; their key shrinks because ``tokens_done`` grew). Returns
+        the number of requests whose key was refreshed; 0 for policies with
+        no length estimate (fcfs), whose keys never change.
+        """
+        if self.estimate is None:
+            return 0
+        if self.scorer is not None and waiting:
+            scores = self.scorer([r.prompt for r in waiting])
+            for r, s in zip(waiting, scores):
+                r.score = float(s)
+                r.scored = True
+        n = 0
+        for r in (*running, *waiting):
+            r.remaining_est = max(self.estimate(r) - r.tokens_done, floor)
+            n += 1
+        return n
 
     def key(self, req: Request) -> float:
         return self.key_fn(req)
@@ -50,12 +101,22 @@ def fcfs() -> Policy:
 
 
 def oracle_sjf() -> Policy:
-    return Policy("oracle", key_fn=lambda r: float(r.true_length))
+    return Policy("oracle",
+                  key_fn=lambda r: (r.remaining_est
+                                    if r.remaining_est is not None
+                                    else float(r.true_length)),
+                  estimate=lambda r: float(r.true_length))
 
 
 def predictor_sjf(name: str, scorer) -> Policy:
-    """PARS / pointwise / listwise — SJF on predicted score."""
-    return Policy(name, key_fn=lambda r: r.score, scorer=scorer)
+    """PARS / pointwise / listwise — SJF on predicted score (remaining
+    length once refreshed)."""
+    return Policy(name,
+                  key_fn=lambda r: (r.remaining_est
+                                    if r.remaining_est is not None
+                                    else r.score),
+                  scorer=scorer,
+                  estimate=lambda r: r.score)
 
 
 def pars_plus(scorer, *, alpha: float = 0.5, score_scale: float = 1.0) -> Policy:
@@ -68,14 +129,18 @@ def pars_plus(scorer, *, alpha: float = 0.5, score_scale: float = 1.0) -> Policy
         key = score / score_scale + alpha * log1p(prompt_len)
 
     so two requests with equal expected decode length order by prefill cost.
-    ``alpha=0`` reduces exactly to PARS. Evaluated in
+    ``alpha=0`` reduces exactly to PARS. Under iterative re-ranking the
+    decode term becomes the refreshed remaining length; the prefill term is
+    a fixed property of the prompt and never decays. Evaluated in
     benchmarks/pars_plus_ablation.py.
     """
     import math
 
     def key(r: Request) -> float:
-        return r.score / score_scale + alpha * math.log1p(r.prompt_len)
-    return Policy("pars+", key_fn=key, scorer=scorer)
+        base = r.remaining_est if r.remaining_est is not None else r.score
+        return base / score_scale + alpha * math.log1p(r.prompt_len)
+    return Policy("pars+", key_fn=key, scorer=scorer,
+                  estimate=lambda r: r.score)
 
 
 def make_policy(name: str, predictor=None, **kw) -> Policy:

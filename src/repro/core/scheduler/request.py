@@ -12,14 +12,33 @@ class RequestState(enum.Enum):
     FINISHED = "finished"
 
 
-@dataclass
+@dataclass(eq=False)
 class Request:
+    """One request's lifecycle record.
+
+    ``eq=False`` is deliberate: requests are *identities*, not values. Two
+    same-prompt arrivals in the same tick are field-identical, and dataclass
+    value equality made queue membership tests (``Scheduler.defer``'s
+    ``r not in reqs``, ``running.remove(victim)``) silently drop or evict
+    the wrong one. Identity equality (and identity hashing) makes every
+    list/set operation on queues refer to *this* request only.
+    """
     req_id: int
     prompt: str
     arrival_time: float
     prompt_len: int                   # prefill tokens
     true_length: int                  # ground-truth decode tokens (completion)
-    score: float = 0.0                # predictor score (higher = longer)
+    score: float = 0.0                # predicted total output length
+    # Whether a policy scorer has annotated ``score``. An explicit flag, not
+    # a ``score == 0.0`` sentinel: a legitimate predictor score of exactly
+    # 0.0 must not look "unscored" and be re-scored on every add_requests.
+    scored: bool = False
+    # Iterative re-ranking (``rerank_interval`` on the serving core): the
+    # priority key refreshed at the last re-rank, ``max(score − tokens_done,
+    # floor)`` — predicted decode tokens *remaining*, not total. ``None``
+    # means the write-once world: policies fall back to the arrival-time
+    # score (or true length, for the oracle) exactly as before.
+    remaining_est: Optional[float] = None
     state: RequestState = RequestState.WAITING
     # runtime bookkeeping
     start_time: Optional[float] = None        # admitted to running queue
@@ -45,6 +64,11 @@ class Request:
     cached_prefix_tokens: Optional[int] = None
     boosted: bool = False                     # starvation-prevention flag
     preempt_count: int = 0                    # recompute-preemption evictions
+    defer_count: int = 0                      # engine back-pressure deferrals
+    # Preemptions suffered in a scheduling cycle whose ranks had just been
+    # refreshed by iterative re-ranking. ``None`` means the run never
+    # re-ranked — metrics report NaN instead of a misleading 0.
+    rerank_preemptions: Optional[int] = None
     # Incremental KV reservation (``kv_reservation="incremental"`` on the
     # serving core): decode-time block-``grow`` denials charged while *this*
     # request was trying to take its next decode step, and the number of

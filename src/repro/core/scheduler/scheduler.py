@@ -13,13 +13,25 @@ Starvation prevention (paper default 2 minutes): any waiting request whose
 wait time exceeds ``starvation_threshold`` has its priority boosted — boosted
 requests are scheduled ahead of everything else, FIFO among themselves.
 
+**Iterative re-ranking** (:meth:`Scheduler.rerank`, driven by the serving
+core's ``rerank_interval``): refresh every request's priority key to its
+predicted *remaining* length through the policy's batched
+:meth:`~repro.core.scheduler.policies.Policy.refresh`. The next scheduling
+cycle's sort, admission order, and preemption victim choice all read the
+refreshed keys — a long request that has nearly finished stops ranking as
+"long". Because refreshed ranks can demote a request repeatedly, re-ranked
+runs carry a starvation bound: a request preempted or deferred more than
+``pin_after_demotions`` times is pinned boosted (scheduled ahead of all
+ranked traffic, never preempted again).
+
 This object is shared verbatim by the real JAX engine and the discrete-event
 simulator; only the clock source differs.
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 from repro.core.scheduler.policies import Policy
 from repro.core.scheduler.request import Request, RequestState
@@ -43,6 +55,11 @@ class Scheduler:
     preemption: bool = False
     preempt_margin: float = 0.0
     max_preemptions: int = 2
+    # Starvation bound for refreshed ranks: once a request has been demoted
+    # (preempted or deferred) more than this many times, it is pinned
+    # boosted. ``None`` disables the bound (the historical behaviour); the
+    # serving core sets it whenever iterative re-ranking is enabled.
+    pin_after_demotions: Optional[int] = None
     # KV-budget awareness (installed by ServingCore): ``admit_hook`` is the
     # admission gate — called in rank order, it reserves cache blocks and
     # returns False to keep a request in W this cycle (memory back-pressure
@@ -53,6 +70,13 @@ class Scheduler:
     evict_hook: Optional[Callable[[Request], None]] = None
     waiting: List[Request] = field(default_factory=list)
     running: List[Request] = field(default_factory=list)
+    # observability: rank passes (full sorts of W) and re-rank refreshes —
+    # the double-rank regression test counts the former per cycle
+    rank_passes: int = 0
+    rerank_count: int = 0
+    # a refresh happened and no ranked cycle has consumed it yet: preemptions
+    # in that first cycle are attributed to re-ranking (metrics)
+    _just_reranked: bool = field(default=False, init=False, repr=False)
 
     # ------------------------------------------------------------------ API
     def add_request(self, req: Request) -> None:
@@ -66,36 +90,63 @@ class Scheduler:
             r.state = RequestState.WAITING
         self.waiting.extend(reqs)
 
+    def rerank(self, now: float, *, floor: float = 0.0) -> int:
+        """Refresh every queued request's priority key to its predicted
+        remaining length (one batched scorer call for W — see
+        ``Policy.refresh``). The following :meth:`schedule` cycle sorts,
+        admits, and preempts by the refreshed keys. Returns the number of
+        refreshed keys (0 for policies with no length estimate)."""
+        n = self.policy.refresh(self.running, self.waiting, floor=floor)
+        self.rerank_count += 1
+        self._just_reranked = True
+        return n
+
     def _boost(self, now: float) -> None:
         for r in self.waiting:
             if not r.boosted and now - r.arrival_time > self.starvation_threshold:
                 r.boosted = True
 
+    def _sort_key(self, r: Request) -> Tuple:
+        """W ordering: boosted first (FIFO among them), then policy key,
+        then arrival (stable tiebreak)."""
+        return ((0, r.arrival_time, 0.0) if r.boosted
+                else (1, self.policy.key(r), r.arrival_time))
+
     def _rank(self) -> None:
-        """Sort W: boosted first (FIFO among them), then policy key, then
-        arrival (stable tiebreak)."""
-        self.waiting.sort(
-            key=lambda r: ((0, r.arrival_time, 0.0) if r.boosted
-                           else (1, self.policy.key(r), r.arrival_time)))
+        self.waiting.sort(key=self._sort_key)
+        self.rank_passes += 1
+
+    def _note_demotion(self, r: Request) -> None:
+        """Starvation bound under re-ranking: a request demoted (preempted
+        or deferred) more than ``pin_after_demotions`` times is pinned
+        boosted — ahead of all ranked traffic, never preempted again."""
+        if (self.pin_after_demotions is not None
+                and r.preempt_count + r.defer_count > self.pin_after_demotions):
+            r.boosted = True
 
     def schedule(self, now: float) -> List[Request]:
         """One scheduling cycle: move top-ranked W → R up to capacity.
 
         Returns the newly admitted requests (engine must prefill them).
         Under static batching, admission only happens when R is empty.
+        W is boosted and ranked exactly once per cycle; the preemption pass
+        and the admission scan both reuse that one sort (victims evicted
+        mid-cycle are inserted in rank order, not re-sorted).
         """
         self.retire_finished(now)
         if not self.continuous and self.running:
             return []
-        if self.preemption and self.waiting:
-            self._boost(now)
-            self._rank()
-            self._preempt()
         free = self.max_batch - len(self.running)
-        if free <= 0 or not self.waiting:
+        if not self.waiting or (free <= 0 and not self.preemption):
             return []
         self._boost(now)
         self._rank()
+        if self.preemption:
+            self._preempt()
+            free = self.max_batch - len(self.running)
+        self._just_reranked = False
+        if free <= 0 or not self.waiting:
+            return []
         if self.admit_hook is None:
             admitted = self.waiting[:free]
             del self.waiting[:free]
@@ -134,27 +185,33 @@ class Scheduler:
     def defer(self, reqs: List[Request]) -> None:
         """Return admitted-but-unplaceable requests to the head of W (engine
         back-pressure through the scheduler API, not queue surgery). The
-        caller is responsible for releasing any resources it reserved."""
+        caller is responsible for releasing any resources it reserved.
+
+        Membership is by request *identity* (an id-set, O(n+m)): two
+        field-identical requests must never be confused, and a linear
+        ``r in reqs`` scan per running request was O(n·m)."""
         if not reqs:
             return
-        self.running = [r for r in self.running if r not in reqs]
+        ids = {id(r) for r in reqs}
+        self.running = [r for r in self.running if id(r) not in ids]
         for r in reqs:
             r.state = RequestState.WAITING
             r.prefilled_tokens = 0       # deferred residency is fully released
             r.prefill_target = None
+            r.defer_count += 1
+            self._note_demotion(r)
         self.waiting[:0] = reqs
 
     def _preempt(self) -> None:
         """Evict worst-running in favour of strictly-better waiting requests
-        (requires self.waiting already ranked)."""
+        (requires self.waiting already ranked; keeps it ranked)."""
         while len(self.running) >= self.max_batch and self.waiting:
             cand = self.waiting[0]
-            if cand.boosted:
-                victim_pool = [r for r in self.running if not r.boosted]
-            else:
-                victim_pool = self.running
+            # boosted requests are never preempted (the starvation bound's
+            # "pinned" guarantee), whatever the candidate's key says
+            victim_pool = [r for r in self.running if not r.boosted]
             victims = [r for r in victim_pool
-                       if getattr(r, "preempt_count", 0) < self.max_preemptions]
+                       if r.preempt_count < self.max_preemptions]
             if not victims:
                 return
             victim = max(victims, key=self.policy.key)
@@ -163,7 +220,11 @@ class Scheduler:
                     < self.policy.key(victim)):
                 self.running.remove(victim)
                 victim.state = RequestState.WAITING
-                victim.preempt_count = getattr(victim, "preempt_count", 0) + 1
+                victim.preempt_count += 1
+                if getattr(self, "_just_reranked", False):
+                    victim.rerank_preemptions = \
+                        (victim.rerank_preemptions or 0) + 1
+                self._note_demotion(victim)
                 # a half-prefilled victim loses its partial KV residency too:
                 # re-admission re-prefills from offset 0 (recompute semantics)
                 # and re-snapshots its prefill target
@@ -171,8 +232,9 @@ class Scheduler:
                 victim.prefill_target = None
                 if self.evict_hook is not None:
                     self.evict_hook(victim)
-                self.waiting.append(victim)
-                self._rank()
+                # W stays sorted: insert at the victim's rank position
+                # instead of re-sorting the whole queue
+                bisect.insort(self.waiting, victim, key=self._sort_key)
             else:
                 return
 

@@ -167,6 +167,20 @@ class ServingCore:
     which blocks admissions reserve, so the historical behaviour is opted
     into, never silently altered.
 
+    ``rerank_interval`` / ``rerank_every_steps`` — iterative re-ranking
+    (ELIS-style): refresh every queued request's priority key to its
+    predicted *remaining* length (``max(score − tokens_done,
+    rerank_floor)``) every that-many clock seconds and/or serving cycles.
+    The refresh re-scores the waiting queue in one batched predictor call
+    (``Policy.refresh``) and the very next scheduling cycle sorts, admits,
+    and preempts by the refreshed keys — a long request that has emitted
+    most of its predicted tokens stops losing to fresh short prompts.
+    Because refreshed ranks can demote the same request repeatedly, the
+    core installs a starvation bound on the scheduler
+    (``pin_after_demotions = rerank_pin_after``, default 3): a request
+    preempted or deferred more often is pinned boosted. Both knobs default
+    to off — ranks stay write-once, bit-identical to the historical loop.
+
     ``kv_reservation`` — ``"full"`` (default, historical) reserves a
     request's worst-case ``backend.kv_demand`` at admission; a resident
     request can never stall on memory, but admission is gated on KV the
@@ -187,12 +201,20 @@ class ServingCore:
                  prefill_chunk_tokens: Optional[int] = None,
                  record_token_times: bool = False,
                  prefix_caching: bool = False,
-                 kv_reservation: str = "full") -> None:
+                 kv_reservation: str = "full",
+                 rerank_interval: Optional[float] = None,
+                 rerank_every_steps: Optional[int] = None,
+                 rerank_floor: float = 0.0,
+                 rerank_pin_after: int = 3) -> None:
         if prefill_chunk_tokens is not None and prefill_chunk_tokens <= 0:
             raise ValueError("prefill_chunk_tokens must be positive or None")
         if kv_reservation not in ("full", "incremental"):
             raise ValueError(f"kv_reservation must be 'full' or "
                              f"'incremental', got {kv_reservation!r}")
+        if rerank_interval is not None and rerank_interval <= 0:
+            raise ValueError("rerank_interval must be positive or None")
+        if rerank_every_steps is not None and rerank_every_steps <= 0:
+            raise ValueError("rerank_every_steps must be positive or None")
         self.scheduler = scheduler
         self.backend = backend
         self.allocator = allocator or BlockAllocator.unbounded()
@@ -201,6 +223,21 @@ class ServingCore:
         self.record_token_times = record_token_times
         self.prefix_caching = prefix_caching
         self.kv_reservation = kv_reservation
+        # Iterative re-ranking cadence: refresh priority keys to predicted
+        # *remaining* length every ``rerank_interval`` clock seconds and/or
+        # every ``rerank_every_steps`` serving cycles (either one firing
+        # triggers a refresh). Off by default — ranks stay write-once.
+        self.rerank_interval = rerank_interval
+        self.rerank_every_steps = rerank_every_steps
+        self.rerank_floor = rerank_floor
+        self._rerank_enabled = (rerank_interval is not None
+                                or rerank_every_steps is not None)
+        self._steps_since_rerank = 0
+        self._last_rerank_t: Optional[float] = None
+        if self._rerank_enabled and scheduler.pin_after_demotions is None:
+            # starvation bound: re-ranking can demote the same request over
+            # and over; pin it boosted after ``rerank_pin_after`` demotions
+            scheduler.pin_after_demotions = rerank_pin_after
         # req_id -> full chunk-hash chain, computed once per residency: the
         # KV gate re-evaluates every waiting request each cycle under
         # back-pressure, and re-tokenizing + re-hashing a long shared prompt
@@ -251,14 +288,23 @@ class ServingCore:
         ``max(predicted_len(req) - tokens_done, 0)`` predicted decode
         tokens. The router's ``predicted_shortest_queue`` policy sums PARS
         scores through this (``predicted_len`` maps a request to its
-        predicted output length — typically ``req.score``)."""
+        predicted output length — typically ``req.score``).
+
+        When iterative re-ranking has refreshed a request's remaining
+        estimate (``Request.remaining_est``), the probe reads *that* —
+        never the stale arrival score — so routing pressure decays as a
+        replica's long requests approach completion, in lockstep with the
+        keys its own scheduler ranks by."""
         total = 0.0
         for r in (*self._pending, *self.scheduler.waiting,
                   *self.scheduler.running):
             target = (r.prefill_target if r.prefill_target is not None
                       else self.backend.prefill_total(r))
             total += max(target - r.prefilled_tokens, 0)
-            total += max(float(predicted_len(r)) - r.tokens_done, 0.0)
+            if r.remaining_est is not None:
+                total += r.remaining_est
+            else:
+                total += max(float(predicted_len(r)) - r.tokens_done, 0.0)
         return total
 
     def prefix_affinity_blocks(self, req: Request) -> int:
@@ -343,6 +389,9 @@ class ServingCore:
             # preemption re-admissions like ``cached_prefix_tokens``
             req.grow_failures = req.grow_failures or 0
             req.grow_preemptions = req.grow_preemptions or 0
+        if self._rerank_enabled:
+            # same None → 0 convention for the re-rank preemption counter
+            req.rerank_preemptions = req.rerank_preemptions or 0
         if self.prefix_caching:
             cached = shared * self.allocator.block_size
             if cached:
@@ -427,6 +476,7 @@ class ServingCore:
         victim.state = RequestState.WAITING
         victim.preempt_count += 1
         victim.grow_preemptions = (victim.grow_preemptions or 0) + 1
+        self.scheduler._note_demotion(victim)   # starvation bound applies too
         victim.prefilled_tokens = 0
         victim.prefill_target = None
         self._evict(victim)
@@ -462,9 +512,34 @@ class ServingCore:
                         f"({self.allocator.free_blocks} free)")
                 self._preempt_for_grow(victim)
 
+    def _maybe_rerank(self, now: float) -> None:
+        """Fire a priority-key refresh when the configured cadence is due —
+        *before* this cycle's ``schedule`` call, so the refreshed ranks
+        drive its sort, admission order, and preemption victim choice."""
+        if not self._rerank_enabled:
+            return
+        due = (self.rerank_every_steps is not None
+               and self._steps_since_rerank >= self.rerank_every_steps)
+        if self.rerank_interval is not None:
+            if self._last_rerank_t is None:
+                self._last_rerank_t = now      # cadence origin: first step
+            elif now - self._last_rerank_t >= self.rerank_interval:
+                due = True
+        if due:
+            self.scheduler.rerank(now, floor=self.rerank_floor)
+            self._steps_since_rerank = 0
+            self._last_rerank_t = now
+
+    @property
+    def rerank_count(self) -> int:
+        """Priority-key refreshes performed so far (scheduler-owned)."""
+        return self.scheduler.rerank_count
+
     def step(self, now: float) -> float:
         """One mixed serving cycle: admit → prefill ≤ chunk tokens → one
         decode token for every fully prefilled running request → retire."""
+        self._maybe_rerank(now)
+        self._steps_since_rerank += 1
         self.scheduler.schedule(now)
         chunks = self._plan_chunks()
         if chunks:

@@ -855,7 +855,11 @@ class Engine:
                  paged: Optional[bool] = None,
                  kv_reservation: str = "full",
                  record_tokens: bool = False,
-                 record_token_times: bool = False):
+                 record_token_times: bool = False,
+                 rerank_interval: Optional[float] = None,
+                 rerank_every_steps: Optional[int] = None,
+                 rerank_floor: float = 0.0,
+                 rerank_pin_after: int = 3):
         if paged is None:
             # auto: block-structured KV exists exactly for attention-family
             # append caches; recurrent/enc-dec/sliding-window lanes keep the
@@ -876,7 +880,11 @@ class Engine:
                                 prefill_chunk_tokens=prefill_chunk_tokens,
                                 prefix_caching=prefix_caching,
                                 kv_reservation=kv_reservation,
-                                record_token_times=record_token_times)
+                                record_token_times=record_token_times,
+                                rerank_interval=rerank_interval,
+                                rerank_every_steps=rerank_every_steps,
+                                rerank_floor=rerank_floor,
+                                rerank_pin_after=rerank_pin_after)
 
     # -------------------------------------------------------------------- api
     @property
@@ -910,7 +918,9 @@ def serve(cfg: ModelConfig, params, requests: Sequence[Request], policy, *,
           prefill_chunk_tokens: Optional[int] = None,
           prefix_caching: bool = False,
           paged: Optional[bool] = None,
-          kv_reservation: str = "full") -> LatencyReport:
+          kv_reservation: str = "full",
+          rerank_interval: Optional[float] = None,
+          rerank_every_steps: Optional[int] = None) -> LatencyReport:
     """Convenience wrapper: fresh engine + scheduler, serve, report."""
     sched = Scheduler(policy=policy, max_batch=max_batch,
                       starvation_threshold=starvation_threshold)
@@ -919,8 +929,12 @@ def serve(cfg: ModelConfig, params, requests: Sequence[Request], policy, *,
                  prompt_len=prompt_len, allocator=allocator,
                  bucketed=bucketed, prefill_chunk_tokens=prefill_chunk_tokens,
                  prefix_caching=prefix_caching, paged=paged,
-                 kv_reservation=kv_reservation)
+                 kv_reservation=kv_reservation,
+                 rerank_interval=rerank_interval,
+                 rerank_every_steps=rerank_every_steps)
     eng.submit(requests)
     finished = eng.run(time_scale=time_scale, log_every=log_every)
     assert len(finished) == len(requests), (len(finished), len(requests))
-    return report(policy.name, finished)
+    reranked = rerank_interval is not None or rerank_every_steps is not None
+    return report(policy.name, finished,
+                  reranks=eng.core.rerank_count if reranked else None)

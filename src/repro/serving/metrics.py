@@ -24,7 +24,7 @@ averaging per-replica summaries).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -54,6 +54,10 @@ class LatencyReport:
     # admission — the counters only exist under kv_reservation="incremental")
     grow_failures: float = float("nan")         # decode-time grow denials
     grow_preemptions: float = float("nan")      # evictions those denials forced
+    # Iterative re-ranking (NaN when the run ranked once at arrival — the
+    # counters only exist when a rerank cadence was configured)
+    reranks: float = float("nan")               # priority-key refreshes
+    rerank_preemptions: float = float("nan")    # evictions in refreshed cycles
 
     def row(self) -> str:
         return (f"{self.policy:10s} n={self.n_requests:5d} "
@@ -92,7 +96,11 @@ def itl_samples(finished: Sequence[Request]) -> np.ndarray:
     return np.asarray(samples, dtype=float)
 
 
-def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
+def report(policy: str, finished: Sequence[Request], *,
+           reranks: Optional[float] = None) -> LatencyReport:
+    """``reranks`` — core-level count of priority-key refreshes for the run
+    that produced ``finished`` (``ServingCore.rerank_count``); ``None``
+    (default) reports NaN, the "run never re-ranked" convention."""
     if not finished:
         # every field NaN, including makespan/throughput: a replica that
         # served nothing has no makespan, and a literal 0.0 would skew
@@ -119,6 +127,8 @@ def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
                         if r.grow_failures is not None], dtype=float)
     growp = np.asarray([r.grow_preemptions for r in finished
                         if r.grow_preemptions is not None], dtype=float)
+    rrank = np.asarray([r.rerank_preemptions for r in finished
+                        if r.rerank_preemptions is not None], dtype=float)
     return LatencyReport(
         policy=policy,
         n_requests=len(finished),
@@ -136,6 +146,9 @@ def report(policy: str, finished: Sequence[Request]) -> LatencyReport:
         else float("nan"),
         grow_failures=float(growf.sum()) if len(growf) else float("nan"),
         grow_preemptions=float(growp.sum()) if len(growp) else float("nan"),
+        reranks=float(reranks) if reranks is not None else float("nan"),
+        rerank_preemptions=float(rrank.sum()) if len(rrank)
+        else float("nan"),
     )
 
 
@@ -192,11 +205,14 @@ def _imbalance(counts: Sequence[int]) -> float:
 
 def router_report(policy: str,
                   per_replica_finished: Sequence[Sequence[Request]],
-                  admit_attempts: Sequence[int] = ()) -> RouterReport:
+                  admit_attempts: Sequence[int] = (),
+                  reranks: Optional[float] = None) -> RouterReport:
     """NaN-safe aggregation of N replicas' finished requests (any of which
-    may be empty) into one :class:`RouterReport`."""
+    may be empty) into one :class:`RouterReport`. ``reranks`` — total
+    priority-key refreshes across replicas, ``None`` when no replica
+    re-ranked (reported NaN, like every other absent counter)."""
     pooled = [r for fin in per_replica_finished for r in fin]
-    agg = report(policy, pooled)
+    agg = report(policy, pooled, reranks=reranks)
     per = tuple(report(f"{policy}/r{i}", fin)
                 for i, fin in enumerate(per_replica_finished))
     counts = tuple(len(fin) for fin in per_replica_finished)

@@ -70,7 +70,9 @@ def score_predicted_len(req: Request) -> float:
     """Default predicted output length: the PARS score the scheduling policy
     annotated at arrival, clipped at 0 (scores are relative ranks, so an
     unannotated request predicts zero remaining decode tokens and routes by
-    prefill work + queue size alone)."""
+    prefill work + queue size alone). Only a fallback: when iterative
+    re-ranking is on, ``ServingCore.predicted_remaining_tokens`` reads the
+    refreshed ``Request.remaining_est`` instead of calling this."""
     return max(req.score, 0.0)
 
 
@@ -216,6 +218,10 @@ class ReplicaRouter:
     def report(self, label: Optional[str] = None) -> RouterReport:
         """Aggregate + per-replica metrics for everything finished so far
         (NaN-safe when some replica served nothing)."""
+        reranked = any(c._rerank_enabled for c in self.replicas)
         return router_report(label or self.policy,
                              [core.finished for core in self.replicas],
-                             admit_attempts=self.admit_attempts)
+                             admit_attempts=self.admit_attempts,
+                             reranks=(sum(c.rerank_count
+                                          for c in self.replicas)
+                                      if reranked else None))

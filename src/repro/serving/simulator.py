@@ -119,6 +119,10 @@ def simulate(requests: Sequence[Request], scheduler: Scheduler, *,
              prefix_caching: bool = False,
              kv_reservation: str = "full",
              record_token_times: bool = False,
+             rerank_interval: Optional[float] = None,
+             rerank_every_steps: Optional[int] = None,
+             rerank_floor: float = 0.0,
+             rerank_pin_after: int = 3,
              on_step=None) -> List[Request]:
     """Run to completion; returns the finished requests (with timestamps).
 
@@ -130,7 +134,10 @@ def simulate(requests: Sequence[Request], scheduler: Scheduler, *,
     only charges the non-shared suffix's prefill tokens.
     ``kv_reservation="incremental"`` admits on prompt + one decode block and
     grows per step (the paged-KV admission policy); the accounting is the
-    shared core's, so decisions mirror the real engine's exactly."""
+    shared core's, so decisions mirror the real engine's exactly.
+    ``rerank_interval`` / ``rerank_every_steps`` enable iterative
+    re-ranking: priority keys refresh to predicted *remaining* length on
+    that cadence (virtual seconds / serving cycles)."""
     allocator = (BlockAllocator(kv_blocks, block_size) if kv_blocks
                  else BlockAllocator.unbounded(block_size))
     core = ServingCore(scheduler, SimBackend(cost), allocator=allocator,
@@ -138,7 +145,11 @@ def simulate(requests: Sequence[Request], scheduler: Scheduler, *,
                        prefill_chunk_tokens=prefill_chunk_tokens,
                        prefix_caching=prefix_caching,
                        kv_reservation=kv_reservation,
-                       record_token_times=record_token_times)
+                       record_token_times=record_token_times,
+                       rerank_interval=rerank_interval,
+                       rerank_every_steps=rerank_every_steps,
+                       rerank_floor=rerank_floor,
+                       rerank_pin_after=rerank_pin_after)
     core.submit(requests)
     return core.run(max_time=max_time, on_step=on_step)
 
@@ -152,7 +163,11 @@ def make_sim_replicas(n: int, policy_factory: Callable[[], object], *,
                       prefill_chunk_tokens: Optional[int] = None,
                       prefix_caching: bool = False,
                       kv_reservation: str = "full",
-                      record_token_times: bool = False
+                      record_token_times: bool = False,
+                      rerank_interval: Optional[float] = None,
+                      rerank_every_steps: Optional[int] = None,
+                      rerank_floor: float = 0.0,
+                      rerank_pin_after: int = 3
                       ) -> List[ServingCore]:
     """N independent sim replicas: each gets a fresh scheduler (via
     ``policy_factory`` — a zero-arg callable so stateful scorers are not
@@ -171,7 +186,11 @@ def make_sim_replicas(n: int, policy_factory: Callable[[], object], *,
                                  prefill_chunk_tokens=prefill_chunk_tokens,
                                  prefix_caching=prefix_caching,
                                  kv_reservation=kv_reservation,
-                                 record_token_times=record_token_times))
+                                 record_token_times=record_token_times,
+                                 rerank_interval=rerank_interval,
+                                 rerank_every_steps=rerank_every_steps,
+                                 rerank_floor=rerank_floor,
+                                 rerank_pin_after=rerank_pin_after))
     return cores
 
 
@@ -199,20 +218,32 @@ def simulate_replicas(requests: Sequence[Request], *, n_replicas: int,
 def run_policy(requests: Sequence[Request], policy, *, max_batch: int = 16,
                continuous: bool = True, cost: CostModel = CostModel(),
                starvation_threshold: float = 120.0,
+               preemption: bool = False, max_preemptions: int = 2,
                kv_blocks: Optional[int] = None,
                prefill_chunk_tokens: Optional[int] = None,
                prefix_caching: bool = False,
-               kv_reservation: str = "full") -> LatencyReport:
+               kv_reservation: str = "full",
+               rerank_interval: Optional[float] = None,
+               rerank_every_steps: Optional[int] = None,
+               rerank_floor: float = 0.0,
+               rerank_pin_after: int = 3) -> LatencyReport:
     """Convenience: fresh scheduler + simulate + report."""
     # deep-ish copy so one policy run doesn't pollute another
     reqs = [Request(r.req_id, r.prompt, r.arrival_time, r.prompt_len,
                     r.true_length) for r in requests]
     sched = Scheduler(policy=policy, max_batch=max_batch,
                       continuous=continuous,
-                      starvation_threshold=starvation_threshold)
+                      starvation_threshold=starvation_threshold,
+                      preemption=preemption, max_preemptions=max_preemptions)
     finished = simulate(reqs, sched, cost=cost, kv_blocks=kv_blocks,
                         prefill_chunk_tokens=prefill_chunk_tokens,
                         prefix_caching=prefix_caching,
-                        kv_reservation=kv_reservation)
+                        kv_reservation=kv_reservation,
+                        rerank_interval=rerank_interval,
+                        rerank_every_steps=rerank_every_steps,
+                        rerank_floor=rerank_floor,
+                        rerank_pin_after=rerank_pin_after)
     assert len(finished) == len(requests), (len(finished), len(requests))
-    return report(policy.name, finished)
+    reranked = rerank_interval is not None or rerank_every_steps is not None
+    return report(policy.name, finished,
+                  reranks=sched.rerank_count if reranked else None)

@@ -1,0 +1,417 @@
+"""Iterative re-ranking (remaining-length-aware scheduling) + the three
+scheduler correctness fixes that re-ranking makes hot:
+
+* the ``score == 0.0`` unscored sentinel in ``Policy.annotate`` (a
+  legitimate zero score was re-scored on every ``add_requests``),
+* dataclass field-wise ``Request.__eq__`` used for queue membership (two
+  field-identical requests confused by ``defer``/``_preempt``),
+* the doubled ``_boost``/``_rank`` pass per ``schedule`` cycle under
+  preemption.
+
+Re-ranking coverage: batched refresh scoring, remaining-key monotonicity,
+fixed-trace determinism with re-rank on and off, the pin-after-K-demotions
+starvation bound, probe freshness, and router N=1 parity with a rerank
+cadence set.
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core.scheduler.policies import (fcfs, make_policy, oracle_sjf,
+                                           predictor_sjf)
+from repro.core.scheduler.request import Request, RequestState
+from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.metrics import report
+from repro.serving.router import ROUTING_POLICIES
+from repro.serving.simulator import (CostModel, make_sim_replicas, simulate,
+                                     simulate_replicas)
+
+
+def _req(i, true_len, arrival=0.0, prompt=None, prompt_len=8):
+    return Request(i, prompt if prompt is not None else f"p{i}",
+                   arrival, prompt_len, true_len)
+
+
+class CountingScorer:
+    """Batched-dispatch observability: every __call__ is one predictor
+    dispatch; ``seen`` accumulates each prompt every time it was scored."""
+
+    def __init__(self, fn=lambda p: 0.0):
+        self.fn = fn
+        self.calls = 0
+        self.seen = []
+
+    def __call__(self, prompts):
+        self.calls += 1
+        self.seen.extend(prompts)
+        return [self.fn(p) for p in prompts]
+
+
+# ---------------------------------------------------- satellite 1: sentinel
+def test_zero_score_is_not_rescored():
+    """A predictor that legitimately scores a prompt 0.0 must not be asked
+    about it again on every add_requests call (the score==0.0 sentinel
+    regression): exactly one scoring per request, ever."""
+    scorer = CountingScorer(lambda p: 0.0)
+    s = Scheduler(policy=predictor_sjf("pars", scorer), max_batch=4)
+    first = [_req(0, 5), _req(1, 5)]
+    s.add_requests(first)
+    assert all(r.scored and r.score == 0.0 for r in first)
+    s.add_requests([_req(2, 5)])
+    s.add_request(_req(3, 5))
+    # every prompt scored exactly once — no re-dispatch for the zero scores
+    assert sorted(scorer.seen) == ["p0", "p1", "p2", "p3"]
+
+
+def test_annotate_batches_one_call_per_add():
+    scorer = CountingScorer(lambda p: float(len(p)))
+    s = Scheduler(policy=predictor_sjf("pars", scorer), max_batch=4)
+    s.add_requests([_req(i, 5) for i in range(6)])
+    assert scorer.calls == 1                    # one batched dispatch
+
+
+# ----------------------------------------------- satellite 2: identity eq
+def _twins():
+    """Two distinct requests with bitwise-identical fields (same-prompt
+    arrivals in the same tick)."""
+    a, b = _req(7, 5, prompt="dup"), _req(7, 5, prompt="dup")
+    assert a is not b
+    return a, b
+
+
+def test_request_equality_is_identity():
+    a, b = _twins()
+    assert a != b                     # not value equality
+    assert a == a
+    assert len({a, b}) == 2           # hashable by identity → usable in sets
+
+
+def test_defer_with_field_identical_requests_keeps_the_other():
+    """defer([b]) must remove exactly b from R — with dataclass value
+    equality ``r not in reqs`` matched a too and silently dropped it."""
+    a, b = _twins()
+    s = Scheduler(policy=fcfs(), max_batch=2)
+    for r in (a, b):
+        r.state = RequestState.RUNNING
+    s.running = [a, b]
+    s.defer([b])
+    assert len(s.running) == 1 and s.running[0] is a
+    assert len(s.waiting) == 1 and s.waiting[0] is b
+    assert a.state is RequestState.RUNNING
+    assert b.state is RequestState.WAITING
+    assert b.defer_count == 1 and a.defer_count == 0
+
+
+def test_preempt_evicts_the_chosen_victim_not_its_twin():
+    """running.remove(victim) must evict the object _preempt chose, even
+    when a field-identical twin sits earlier in R."""
+    a, b = _twins()
+    s = Scheduler(policy=oracle_sjf(), max_batch=2, preemption=True)
+    for r in (a, b):
+        r.state = RequestState.RUNNING
+    s.running = [a, b]
+    s.add_requests([_req(1, 1, arrival=0.0)])   # short candidate
+    evicted = []
+    s.evict_hook = lambda r: evicted.append(r)
+    s.schedule(0.0)
+    assert len(evicted) == 1
+    # exactly one of the twins is out; the survivor is the *other object*
+    assert sum(1 for r in s.running if r in (a, b)) == 1
+    survivor = next(r for r in s.running if r in (a, b))
+    assert survivor is not evicted[0]
+
+
+# ---------------------------------------------- satellite 3: single rank
+def test_schedule_ranks_waiting_exactly_once_per_cycle():
+    """Under preemption the cycle used to boost+sort W once for _preempt
+    and a second time before admission; now exactly one rank pass (and
+    preemption evictions keep W sorted by insertion, not by re-sorting)."""
+    s = Scheduler(policy=oracle_sjf(), max_batch=2, preemption=True)
+    longs = [_req(0, 100), _req(1, 90)]
+    for r in longs:
+        r.state = RequestState.RUNNING
+    s.running = list(longs)
+    s.add_requests([_req(2, 1), _req(3, 2), _req(4, 3)])
+    assert s.rank_passes == 0
+    admitted = s.schedule(0.0)
+    assert s.rank_passes == 1                   # one sort, reused throughout
+    assert admitted                             # preemption freed capacity
+    # eviction kept W correctly ordered: victims ranked among the waiters
+    keys = [s._sort_key(r) for r in s.waiting]
+    assert keys == sorted(keys)
+    s.schedule(1.0)
+    assert s.rank_passes <= 2                   # still ≤ one per cycle
+
+
+def test_policy_key_calls_bounded_by_single_sort():
+    """Counting key_fn invocations: one schedule cycle without preemption
+    costs exactly one key evaluation per waiting request (list.sort calls
+    the key once per element, and there is no second sort)."""
+    calls = []
+    pol = oracle_sjf()
+    base_key = pol.key_fn
+    pol.key_fn = lambda r: (calls.append(r.req_id) or base_key(r))
+    s = Scheduler(policy=pol, max_batch=2)
+    s.add_requests([_req(i, 10 + i) for i in range(5)])
+    s.schedule(0.0)
+    assert len(calls) == 5                      # was 10 with the double rank
+
+
+# ------------------------------------------------------- batched refresh
+def test_refresh_rescored_waiting_in_one_batched_call():
+    scorer = CountingScorer(lambda p: float(len(p)))
+    s = Scheduler(policy=predictor_sjf("pars", scorer), max_batch=2)
+    s.add_requests([_req(i, 5, prompt="x" * (i + 1)) for i in range(6)])
+    assert scorer.calls == 1
+    n = s.rerank(now=0.0)
+    assert n == 6                               # every queued key refreshed
+    assert scorer.calls == 2                    # ONE more dispatch, not six
+    assert s.rerank_count == 1
+
+
+def test_refresh_picks_up_updated_predictor():
+    """The batched waiting-queue re-score exists so an online-updated
+    predictor propagates into the ranks (and probes) without per-request
+    dispatch."""
+    state = {"scale": 10.0}
+    scorer = CountingScorer(lambda p: state["scale"])
+    s = Scheduler(policy=predictor_sjf("pars", scorer), max_batch=2)
+    r = _req(0, 5)
+    s.add_requests([r])
+    assert r.score == 10.0
+    state["scale"] = 3.0                        # predictor got better
+    s.rerank(now=1.0)
+    assert r.score == 3.0
+    assert r.remaining_est == 3.0
+
+
+def test_fcfs_refresh_is_a_noop():
+    s = Scheduler(policy=fcfs(), max_batch=2)
+    r = _req(0, 5, arrival=2.5)
+    s.add_requests([r])
+    assert s.rerank(now=1.0) == 0
+    assert r.remaining_est is None
+    assert s.policy.key(r) == 2.5               # key stays arrival time
+
+
+# -------------------------------------------------- remaining-length keys
+def test_running_key_never_increases_as_tokens_done_grows():
+    """Remaining-length monotonicity: across refreshes, a running request's
+    key is non-increasing in tokens_done (and floored, never negative)."""
+    s = Scheduler(policy=oracle_sjf(), max_batch=1)
+    r = _req(0, 10)
+    r.state = RequestState.RUNNING
+    s.running = [r]
+    keys = []
+    for done in (0, 3, 7, 9, 10, 12):
+        r.tokens_done = done
+        s.rerank(now=float(done))
+        keys.append(s.policy.key(r))
+    assert keys == sorted(keys, reverse=True)
+    assert keys[0] == 10.0 and keys[-1] == 0.0  # floored at 0
+    assert all(k >= 0.0 for k in keys)
+
+
+def test_sim_run_keys_monotone_between_refreshes():
+    """End-to-end: under a per-step rerank cadence, every running request's
+    key observed after each step never increases while it stays resident."""
+    sched = Scheduler(policy=oracle_sjf(), max_batch=4)
+    seen = {}
+
+    def watch(core, now):
+        for r in core.scheduler.running:
+            seen.setdefault(r.req_id, []).append(core.scheduler.policy.key(r))
+
+    reqs = [_req(i, 5 + 7 * i, arrival=0.1 * i) for i in range(8)]
+    fin = simulate(reqs, sched, rerank_every_steps=1, on_step=watch)
+    assert len(fin) == 8
+    assert seen
+    for rid, keys in seen.items():
+        assert keys == sorted(keys, reverse=True), rid
+
+
+def test_without_rerank_behaviour_is_write_once():
+    """No cadence configured ⇒ remaining_est never set, keys = arrival
+    scores, zero refreshes: the historical write-once contract."""
+    sched = Scheduler(policy=oracle_sjf(), max_batch=2)
+    fin = simulate([_req(i, 10 + i) for i in range(5)], sched)
+    assert sched.rerank_count == 0
+    assert all(r.remaining_est is None for r in fin)
+    assert all(r.rerank_preemptions is None for r in fin)
+    rep = report("x", fin)
+    assert math.isnan(rep.reranks) and math.isnan(rep.rerank_preemptions)
+
+
+# ------------------------------------------------------------ determinism
+def _skewed(n=24, seed_gap=0.05):
+    reqs = []
+    for i in range(n):
+        out = 60 if i % 6 == 0 else 4
+        r = _req(i, out, arrival=i * seed_gap)
+        r.score = float(out)
+        r.scored = True
+        reqs.append(r)
+    return reqs
+
+
+@pytest.mark.parametrize("rerank_kw", [
+    {},                                          # off
+    {"rerank_every_steps": 1},
+    {"rerank_every_steps": 3},
+    {"rerank_interval": 0.4},
+])
+def test_fixed_trace_schedules_are_deterministic(rerank_kw):
+    """Re-rank on or off, a fixed trace reproduces the exact schedule run
+    over run (seeded ties: equal keys fall back to arrival order)."""
+    def once():
+        sched = Scheduler(policy=oracle_sjf(), max_batch=3, preemption=True,
+                          max_preemptions=4)
+        fin = simulate(_skewed(), sched,
+                       cost=CostModel(iter_base_s=0.01, per_seq_s=0.0,
+                                      prefill_per_token_s=0.001),
+                       **rerank_kw)
+        return {r.req_id: (r.start_time, r.first_token_time, r.finish_time,
+                           r.preempt_count, r.boosted) for r in fin}
+    assert once() == once()
+
+
+# -------------------------------------------------------- starvation bound
+def test_pin_after_demotions_bounds_preemptions():
+    """Under a per-step rerank cadence and aggressive preemption, a request
+    demoted more than K times is pinned boosted: it stops being a victim
+    and its total demotions stay bounded by K+1."""
+    K = 2
+    long = _req(0, 400, arrival=0.0)
+    shorts = [_req(i, 2, arrival=0.2 * i) for i in range(1, 40)]
+    sched = Scheduler(policy=oracle_sjf(), max_batch=1, preemption=True,
+                      max_preemptions=1000)       # the cap must come from K
+    fin = {r.req_id: r for r in simulate(
+        [long] + shorts, sched,
+        cost=CostModel(iter_base_s=0.01, per_seq_s=0.0,
+                       prefill_per_token_s=0.0),
+        rerank_every_steps=1, rerank_pin_after=K)}
+    assert len(fin) == 40
+    assert sched.pin_after_demotions == K         # core installed the bound
+    lr = fin[0]
+    assert lr.tokens_done == 400
+    assert lr.preempt_count + lr.defer_count <= K + 1
+    assert lr.boosted                             # it did get pinned
+
+
+def test_existing_scheduler_pin_setting_wins():
+    sched = Scheduler(policy=oracle_sjf(), max_batch=2,
+                      pin_after_demotions=7)
+    simulate([_req(0, 3)], sched, rerank_every_steps=1, rerank_pin_after=2)
+    assert sched.pin_after_demotions == 7         # core must not override
+
+
+def test_boosted_requests_are_never_preempted():
+    s = Scheduler(policy=oracle_sjf(), max_batch=1, preemption=True)
+    pinned = _req(0, 1000)
+    pinned.state = RequestState.RUNNING
+    pinned.boosted = True
+    s.running = [pinned]
+    s.add_requests([_req(1, 1)])
+    s.schedule(0.0)
+    assert s.running == [pinned]                  # short stayed waiting
+
+
+# ------------------------------------------------------------- metrics
+def test_rerank_metrics_recorded():
+    sched = Scheduler(policy=oracle_sjf(), max_batch=1, preemption=True,
+                      max_preemptions=4)
+    reqs = [_req(0, 80, arrival=0.0)] + [_req(i, 2, arrival=0.5 + 0.01 * i)
+                                         for i in range(1, 6)]
+    fin = simulate(reqs, sched,
+                   cost=CostModel(iter_base_s=0.01, per_seq_s=0.0,
+                                  prefill_per_token_s=0.0),
+                   rerank_every_steps=1)
+    rep = report("x", fin, reranks=sched.rerank_count)
+    assert rep.reranks > 0
+    assert rep.rerank_preemptions >= 1            # the eviction was attributed
+    assert fin and all(r.rerank_preemptions is not None for r in fin)
+
+
+# ------------------------------------------------------------- probe
+def test_probe_reads_refreshed_estimate_not_stale_score():
+    """predicted_remaining_tokens must serve the refreshed remaining_est —
+    the router otherwise routes by whatever predicted_len(fallback) says."""
+    core = make_sim_replicas(1, oracle_sjf, rerank_every_steps=1)[0]
+    r = _req(0, 9, prompt="a b c d e f g h", prompt_len=8)
+    r.state = RequestState.RUNNING
+    r.prefilled_tokens = 8
+    r.prefill_target = 8
+    core.scheduler.running = [r]
+    stale = core.predicted_remaining_tokens(lambda q: 1000.0)
+    assert stale == pytest.approx(1000.0)         # fallback: predicted_len
+    r.tokens_done = 4
+    core.scheduler.rerank(now=1.0)
+    fresh = core.predicted_remaining_tokens(lambda q: 1000.0)
+    assert fresh == pytest.approx(9 - 4)          # refreshed, not the 1000
+
+
+# ------------------------------------------------------ router N=1 parity
+def _parity_trace(n=24):
+    reqs = []
+    for i in range(n):
+        prompt = " ".join(f"w{i}t{j}" for j in range(10))
+        out = 40 if i % 5 == 0 else 3 + i % 4
+        r = Request(i, prompt, 0.07 * i, 10, out)
+        r.score = float(out)
+        r.scored = True
+        reqs.append(r)
+    return reqs
+
+
+def _copy(reqs):
+    out = []
+    for r in reqs:
+        c = Request(r.req_id, r.prompt, r.arrival_time, r.prompt_len,
+                    r.true_length)
+        c.score, c.scored = r.score, r.scored
+        out.append(c)
+    return out
+
+
+def _per_request(finished):
+    return {r.req_id: (r.start_time, r.first_token_time, r.finish_time,
+                       r.tokens_done, r.preempt_count, r.boosted)
+            for r in finished}
+
+
+def _assert_reports_equal(a, b):
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, float) and math.isnan(va):
+            assert isinstance(vb, float) and math.isnan(vb), f.name
+        else:
+            assert va == vb, (f.name, va, vb)
+
+
+@pytest.mark.parametrize("routing", ROUTING_POLICIES)
+def test_single_replica_parity_with_rerank(routing):
+    """ReplicaRouter(n=1) stays bit-identical to a bare core when iterative
+    re-ranking (plus preemption it drives) is enabled on both."""
+    kw = dict(kv_blocks=64, block_size=16, max_batch=3,
+              rerank_every_steps=2, preemption=True)
+    trace = _parity_trace()
+
+    def sched():
+        return Scheduler(policy=oracle_sjf(), max_batch=3, preemption=True)
+
+    bare_sched = sched()
+    bare = simulate(_copy(trace), bare_sched,
+                    kv_blocks=64, block_size=16,
+                    rerank_every_steps=2)
+    router = simulate_replicas(_copy(trace), n_replicas=1,
+                               policy_factory=oracle_sjf, routing=routing,
+                               **kw)
+    assert _per_request(router.finished) == _per_request(bare)
+    # router.finished is req_id-sorted; order bare the same way so report
+    # means sum in the same order (bit-identical floats, not approx)
+    bare.sort(key=lambda r: r.req_id)
+    _assert_reports_equal(report("parity", bare),
+                          report("parity", router.finished))
+    agg = router.report()
+    assert agg.aggregate.reranks > 0              # cadence actually fired
