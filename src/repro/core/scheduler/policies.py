@@ -24,15 +24,38 @@ predicted *remaining* length, ``max(estimate − tokens_done, floor)``, stored
 in ``Request.remaining_est``. Keys read ``remaining_est`` when it has been
 refreshed and fall back to the arrival-time basis otherwise, so a run that
 never calls ``refresh`` behaves exactly as the historical write-once ranker.
+
+**Predictor graceful degradation.** A production scorer can die, return
+garbage, or stall. Every scorer dispatch therefore goes through
+:meth:`Policy._dispatch`, which converts exceptions (and wall-clock
+overruns past ``scorer_timeout_s``) into counted failures instead of
+crashing the scheduler. Requests in a failed batch stay unscored and rank
+*last* (unknown length is treated as long — conservative for SJF) until a
+retry scores them; after ``scorer_failure_budget`` consecutive dispatch
+failures the policy **degrades to FCFS**: every key becomes the request's
+arrival time, exactly the ladder proxy-model serving uses when the proxy is
+unavailable. While degraded the policy keeps probing the scorer every
+``recovery_probe_every``-th dispatch opportunity and recovers automatically
+on the first success (keys revert to predictor ranks the next cycle). Both
+transitions are counted (``degradations`` / ``recoveries``) and logged.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import logging
+import time
+from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence
 
 from repro.core.scheduler.request import Request
 
 POLICY_NAMES = ("fcfs", "pars", "pars+", "pointwise", "listwise", "oracle")
+
+log = logging.getLogger(__name__)
+
+# Rank basis for a request whose scoring dispatch failed (and the policy is
+# not yet degraded): last, behind every scored request — unknown length is
+# treated as long. The starvation boost still applies, so it cannot starve.
+UNSCORED_KEY = float("inf")
 
 
 @dataclass
@@ -43,11 +66,71 @@ class Policy:
     basis ``refresh`` turns into a remaining-length key. ``None`` (fcfs)
     means the policy has no length estimate and ``refresh`` leaves its keys
     alone.
+
+    ``scorer_failure_budget`` — consecutive failed scorer dispatches before
+    the policy degrades to FCFS keys. ``scorer_timeout_s`` — wall-clock
+    budget per dispatch; an overrun counts as a failure (the call's result
+    is discarded, exactly as if the caller had timed it out).
+    ``recovery_probe_every`` — while degraded, probe the scorer on every
+    N-th dispatch opportunity; the first success recovers the policy.
     """
     name: str
     key_fn: Callable[[Request], float]
     scorer: Optional[Callable[[Sequence[str]], "object"]] = None
     estimate: Optional[Callable[[Request], float]] = None
+    scorer_failure_budget: int = 3
+    scorer_timeout_s: Optional[float] = None
+    recovery_probe_every: int = 1
+    # degradation state (observable, not configuration)
+    degraded: bool = field(default=False, init=False)
+    consecutive_failures: int = field(default=0, init=False)
+    scorer_failures: int = field(default=0, init=False)
+    degradations: int = field(default=0, init=False)
+    recoveries: int = field(default=0, init=False)
+    _probe_calls: int = field(default=0, init=False, repr=False)
+    # a dispatch failed and some requests may still be unscored: the
+    # scheduler re-offers the waiting queue via ``rescore`` until clear
+    needs_rescore: bool = field(default=False, init=False)
+
+    # ---------------------------------------------------------- fault ladder
+    def _dispatch(self, prompts: Sequence[str]):
+        """One guarded batched scorer call. Returns the scores, or ``None``
+        on failure (exception or wall-clock timeout) — never raises. All
+        degradation/recovery bookkeeping lives here, so every dispatch site
+        (annotate / refresh / probe) shares one ladder."""
+        if self.degraded:
+            self._probe_calls += 1
+            if self._probe_calls % max(self.recovery_probe_every, 1):
+                return None             # not this opportunity: stay degraded
+        t0 = time.perf_counter() if self.scorer_timeout_s is not None else 0.0
+        try:
+            scores = self.scorer(prompts)
+        except Exception as e:          # noqa: BLE001 — any scorer fault
+            return self._note_failure(repr(e))
+        if (self.scorer_timeout_s is not None
+                and time.perf_counter() - t0 > self.scorer_timeout_s):
+            return self._note_failure(
+                f"dispatch exceeded {self.scorer_timeout_s}s")
+        self.consecutive_failures = 0
+        if self.degraded:
+            self.degraded = False
+            self.recoveries += 1
+            log.warning("policy %s: scorer healed — restoring %s ranking",
+                        self.name, self.name)
+        return scores
+
+    def _note_failure(self, why: str):
+        self.scorer_failures += 1
+        self.consecutive_failures += 1
+        self.needs_rescore = True
+        if (not self.degraded
+                and self.consecutive_failures >= self.scorer_failure_budget):
+            self.degraded = True
+            self.degradations += 1
+            log.warning("policy %s: %d consecutive scorer failures (last: "
+                        "%s) — degrading to FCFS keys", self.name,
+                        self.consecutive_failures, why)
+        return None
 
     def annotate(self, requests: List[Request]) -> None:
         """Attach predictor scores to newly arrived requests (batched).
@@ -55,16 +138,35 @@ class Policy:
         Idempotent: only requests never scored before are sent to the
         scorer, tracked by ``Request.scored`` — a legitimate score of
         exactly 0.0 is *not* re-scored on later ``add_requests`` calls.
+        A failed dispatch leaves its batch unscored (ranked last) and
+        flags ``needs_rescore`` so the scheduler retries next cycle.
         """
         if self.scorer is None:
             return
         todo = [r for r in requests if not r.scored]
         if not todo:
             return
-        scores = self.scorer([r.prompt for r in todo])
+        scores = self._dispatch([r.prompt for r in todo])
+        if scores is None:
+            return
         for r, s in zip(todo, scores):
             r.score = float(s)
             r.scored = True
+
+    def rescore(self, waiting: Sequence[Request]) -> None:
+        """Retry path, called by the scheduler while ``needs_rescore``:
+        score every still-unscored waiting request, or — when degraded with
+        nothing left to score — probe the scorer with one live prompt so
+        recovery does not depend on fresh arrivals."""
+        todo = [r for r in waiting if not r.scored]
+        if todo:
+            self.annotate(todo)
+            return
+        if self.degraded:
+            if waiting:
+                self._dispatch([waiting[0].prompt])   # recovery probe
+        else:
+            self.needs_rescore = False               # everything scored
 
     def refresh(self, running: Sequence[Request], waiting: Sequence[Request],
                 *, floor: float = 0.0) -> int:
@@ -78,14 +180,19 @@ class Policy:
         changed; their key shrinks because ``tokens_done`` grew). Returns
         the number of requests whose key was refreshed; 0 for policies with
         no length estimate (fcfs), whose keys never change.
+
+        A failed (or degraded) scorer dispatch skips the re-score: keys are
+        still decayed by ``tokens_done`` below — stale-but-decaying ranks,
+        exactly ELIS's tolerance for a broken estimator.
         """
         if self.estimate is None:
             return 0
         if self.scorer is not None and waiting:
-            scores = self.scorer([r.prompt for r in waiting])
-            for r, s in zip(waiting, scores):
-                r.score = float(s)
-                r.scored = True
+            scores = self._dispatch([r.prompt for r in waiting])
+            if scores is not None:
+                for r, s in zip(waiting, scores):
+                    r.score = float(s)
+                    r.scored = True
         n = 0
         for r in (*running, *waiting):
             r.remaining_est = max(self.estimate(r) - r.tokens_done, floor)
@@ -93,6 +200,15 @@ class Policy:
         return n
 
     def key(self, req: Request) -> float:
+        if self.scorer is not None:
+            if self.degraded:
+                return req.arrival_time          # FCFS fallback, all requests
+            if not req.scored and self.needs_rescore:
+                # a dispatch failure left this request unscored: rank last
+                # (unknown length reads as long) until the retry scores it.
+                # Gated on the outstanding-failure flag so hand-scored
+                # requests outside the serving flow keep their key_fn rank.
+                return UNSCORED_KEY
         return self.key_fn(req)
 
 
@@ -108,18 +224,22 @@ def oracle_sjf() -> Policy:
                   estimate=lambda r: float(r.true_length))
 
 
-def predictor_sjf(name: str, scorer) -> Policy:
+def predictor_sjf(name: str, scorer, **fault_kw) -> Policy:
     """PARS / pointwise / listwise — SJF on predicted score (remaining
-    length once refreshed)."""
+    length once refreshed). ``fault_kw`` forwards the degradation knobs
+    (``scorer_failure_budget`` / ``scorer_timeout_s`` /
+    ``recovery_probe_every``)."""
     return Policy(name,
                   key_fn=lambda r: (r.remaining_est
                                     if r.remaining_est is not None
                                     else r.score),
                   scorer=scorer,
-                  estimate=lambda r: r.score)
+                  estimate=lambda r: r.score,
+                  **fault_kw)
 
 
-def pars_plus(scorer, *, alpha: float = 0.5, score_scale: float = 1.0) -> Policy:
+def pars_plus(scorer, *, alpha: float = 0.5, score_scale: float = 1.0,
+              **fault_kw) -> Policy:
     """Beyond-paper variant: prefill-aware SJF.
 
     The paper ranks by expected *decode* length only; at long-prompt regimes
@@ -140,7 +260,7 @@ def pars_plus(scorer, *, alpha: float = 0.5, score_scale: float = 1.0) -> Policy
         base = r.remaining_est if r.remaining_est is not None else r.score
         return base / score_scale + alpha * math.log1p(r.prompt_len)
     return Policy("pars+", key_fn=key, scorer=scorer,
-                  estimate=lambda r: r.score)
+                  estimate=lambda r: r.score, **fault_kw)
 
 
 def make_policy(name: str, predictor=None, **kw) -> Policy:
@@ -153,5 +273,5 @@ def make_policy(name: str, predictor=None, **kw) -> Policy:
         scorer = predictor.score if hasattr(predictor, "score") else predictor
         if name == "pars+":
             return pars_plus(scorer, **kw)
-        return predictor_sjf(name, scorer)
+        return predictor_sjf(name, scorer, **kw)
     raise ValueError(f"unknown policy {name!r}")

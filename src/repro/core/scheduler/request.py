@@ -10,6 +10,19 @@ class RequestState(enum.Enum):
     WAITING = "waiting"
     RUNNING = "running"
     FINISHED = "finished"
+    # Terminal non-success states (fault tolerance): a dropped request left
+    # the system without completing and will never re-enter it. Which one
+    # is recorded in ``Request.drop_reason`` too, for metrics.
+    CANCELLED = "cancelled"   # deadline expired (admission or in-flight)
+    SHED = "shed"             # load shedding under sustained overload
+    REJECTED = "rejected"     # KV demand can never fit the cache budget
+    FAILED = "failed"         # replica-failover retry budget exhausted
+
+
+#: States a request never leaves.
+TERMINAL_STATES = frozenset({RequestState.FINISHED, RequestState.CANCELLED,
+                             RequestState.SHED, RequestState.REJECTED,
+                             RequestState.FAILED})
 
 
 @dataclass(eq=False)
@@ -65,6 +78,26 @@ class Request:
     boosted: bool = False                     # starvation-prevention flag
     preempt_count: int = 0                    # recompute-preemption evictions
     defer_count: int = 0                      # engine back-pressure deferrals
+    # Fault tolerance. ``deadline``: absolute completion deadline in the
+    # serving clock's timebase; the core cancels the request (terminal
+    # CANCELLED) the moment the deadline passes — at admission or mid-flight
+    # — and sheds it at admission when the current length estimate says it
+    # can never be met. ``None`` = no deadline (the historical behaviour).
+    deadline: Optional[float] = None
+    # Times this request was failed over after a replica crash (its KV was
+    # lost; it re-dispatched with recompute-from-prompt). ``None`` means the
+    # run had no failover layer — metrics report NaN instead of 0.
+    failovers: Optional[int] = None
+    # Earliest time the router may re-dispatch this request (failover
+    # backoff: ``backoff * 2**(failovers-1)`` after the crash).
+    route_after: Optional[float] = None
+    # KV admission-gate rejections while waiting (cumulative across
+    # replicas); the router's affinity-starvation escape compares this
+    # against its value at routing time.
+    gate_rejections: int = 0
+    # Why a dropped request left the system ("deadline", "overload",
+    # "kv-infeasible", "failover-budget"); None for live/finished requests.
+    drop_reason: Optional[str] = None
     # Preemptions suffered in a scheduling cycle whose ranks had just been
     # refreshed by iterative re-ranking. ``None`` means the run never
     # re-ranked — metrics report NaN instead of a misleading 0.

@@ -139,6 +139,12 @@ class Scheduler:
         free = self.max_batch - len(self.running)
         if not self.waiting or (free <= 0 and not self.preemption):
             return []
+        # Predictor fault recovery: while a scorer dispatch has failed and
+        # left waiting requests unscored (or the policy sits degraded), offer
+        # the queue back for scoring each cycle. A healthy run never sets
+        # ``needs_rescore``, so this line is dead on the fault-free path.
+        if self.policy.needs_rescore:
+            self.policy.rescore(self.waiting)
         self._boost(now)
         self._rank()
         if self.preemption:

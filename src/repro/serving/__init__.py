@@ -3,11 +3,15 @@ simulator backend, KV accounting, multi-replica router front-end."""
 from repro.serving.core import (PrefillChunk, ServingCore, VirtualClock,
                                 WallClock)
 from repro.serving.engine import Engine, RealBackend, serve
+from repro.serving.faults import (ArrivalSkew, FaultSchedule, GrowStorm,
+                                  ReplicaCrash, ReplicaCrashed, ScorerError,
+                                  ScorerOutage, ScorerTimeout)
 from repro.serving.kv_cache import BlockAllocator, prefix_chunk_hashes
 from repro.serving.metrics import (LatencyReport, RouterReport, itl_samples,
                                    report, router_report)
 from repro.serving.router import (ROUTING_POLICIES, ReplicaRouter,
                                   score_predicted_len)
 from repro.serving.sampler import SamplerConfig, sample
-from repro.serving.simulator import (CostModel, SimBackend, make_sim_replicas,
-                                     run_policy, simulate, simulate_replicas)
+from repro.serving.simulator import (CostModel, SimBackend, make_sim_core,
+                                     make_sim_replicas, run_policy, simulate,
+                                     simulate_replicas)

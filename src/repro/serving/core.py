@@ -45,6 +45,36 @@ The hit is capped at ``prefill_target - 1`` tokens: the final prompt
 position is always recomputed so the backend has logits to emit the first
 output token from (vLLM does the same on a full-prompt hit).
 
+**Fault tolerance.** Production serving must keep its invariants when
+components break, so failure handling is part of the loop, not a wrapper:
+
+* every :meth:`step` first fires an optional ``fault_hook`` (the injection
+  point :mod:`repro.serving.faults` attaches to — ``None`` on healthy runs,
+  so the hot path carries no testing branches) and bumps ``step_count``;
+* a crashed core (:meth:`crash` / ``inject_crash``) raises
+  :class:`~repro.serving.faults.ReplicaCrashed` from every probe, submit,
+  and tick — the router's failure detector — and :meth:`crash` extracts the
+  lost requests (their KV is gone: reservations freed, prefix cache
+  cleared cold) for failover; :meth:`restart` rejoins it cold;
+* per-request **deadlines** (``Request.deadline``) are enforced every step:
+  past-deadline work is cancelled — in-flight requests free their blocks —
+  and with ``deadline_time_per_token`` set, a waiting request whose
+  predicted service time already overruns its deadline is cancelled at
+  admission time instead of wasting prefill (terminal ``CANCELLED``);
+* **load shedding**: when queue depth or KV pressure stays over its
+  threshold for ``shed_sustain_steps`` consecutive steps, the core sheds
+  the worst-ranked non-boosted waiting requests (terminal ``SHED``) and —
+  via a gate composed through ``Scheduler.add_admit_gate`` — refuses
+  admission to work predicted longer than ``shed_predicted_tokens``, so
+  p99 TTFT of admitted traffic degrades gracefully instead of collapsing;
+* a request whose admission demand can never fit the cache budget is
+  terminally **rejected** at gate time (``REJECTED``) rather than deferred
+  forever.
+
+Dropped requests (cancelled / shed / rejected) land in ``ServingCore
+.dropped``, never in ``finished`` — request conservation is
+``finished + dropped + queued == submitted`` at all times.
+
 New serving behavior lands here once and both modes inherit it — the
 multi-replica front-end (:class:`~repro.serving.router.ReplicaRouter`)
 drives N of these cores through :meth:`ServingCore.tick` and the router
@@ -61,6 +91,7 @@ from typing import (Callable, Deque, Dict, List, Optional, Protocol, Sequence,
 
 from repro.core.scheduler.request import Request, RequestState
 from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.faults import ReplicaCrashed
 from repro.serving.kv_cache import (UNBOUNDED_BLOCKS, BlockAllocator,
                                     prefix_chunk_hashes)
 
@@ -205,7 +236,12 @@ class ServingCore:
                  rerank_interval: Optional[float] = None,
                  rerank_every_steps: Optional[int] = None,
                  rerank_floor: float = 0.0,
-                 rerank_pin_after: int = 3) -> None:
+                 rerank_pin_after: int = 3,
+                 deadline_time_per_token: Optional[float] = None,
+                 shed_queue_depth: Optional[int] = None,
+                 shed_kv_pressure: Optional[float] = None,
+                 shed_sustain_steps: int = 3,
+                 shed_predicted_tokens: Optional[float] = None) -> None:
         if prefill_chunk_tokens is not None and prefill_chunk_tokens <= 0:
             raise ValueError("prefill_chunk_tokens must be positive or None")
         if kv_reservation not in ("full", "incremental"):
@@ -215,6 +251,8 @@ class ServingCore:
             raise ValueError("rerank_interval must be positive or None")
         if rerank_every_steps is not None and rerank_every_steps <= 0:
             raise ValueError("rerank_every_steps must be positive or None")
+        if shed_sustain_steps < 1:
+            raise ValueError("shed_sustain_steps must be >= 1")
         self.scheduler = scheduler
         self.backend = backend
         self.allocator = allocator or BlockAllocator.unbounded()
@@ -245,14 +283,102 @@ class ServingCore:
         self._hash_memo: Dict[int, List[int]] = {}
         self.finished: List[Request] = []
         self._pending: Deque[Request] = deque()
+        # --------------------------------------------------- fault tolerance
+        # Terminally dropped requests (CANCELLED / SHED / REJECTED) — part of
+        # request conservation, never of ``finished``.
+        self.dropped: List[Request] = []
+        # Per-step fault injection point (repro.serving.faults attaches
+        # here); ``None`` on healthy runs — the hot path stays branch-free.
+        self.fault_hook: Optional[Callable[["ServingCore", float], None]] = None
+        self.step_count = 0
+        self._crashed = False
+        # Deadlines: ``deadline_time_per_token`` (predicted seconds per
+        # output token) turns a waiting request's length estimate into a
+        # service-time estimate, enabling admission-time shedding of
+        # unmeetable deadlines. Deadline enforcement itself activates the
+        # first time a submitted request carries one.
+        self.deadline_time_per_token = deadline_time_per_token
+        self._deadlines_seen = False
+        self.deadline_cancels = 0
+        # Load shedding: sustained-overload detection plus the composed
+        # admission gate (below).
+        self.shed_queue_depth = shed_queue_depth
+        self.shed_kv_pressure = shed_kv_pressure
+        self.shed_sustain_steps = shed_sustain_steps
+        self.shed_predicted_tokens = shed_predicted_tokens
+        self._shed_enabled = (shed_queue_depth is not None
+                              or shed_kv_pressure is not None)
+        self._overload_steps = 0
+        self._shed_active = False
+        self.shed_count = 0
+        # Gate-time terminal rejection (a demand that can never fit).
+        self.infeasible_rejections = 0
+        self._reject_pending: List[Request] = []
+        self._shed_marked: List[Request] = []
         scheduler.admit_hook = self._reserve
         scheduler.evict_hook = self._evict
+        if self._shed_enabled and shed_predicted_tokens is not None:
+            # runs BEFORE _reserve (gates added later run first), so a shed
+            # veto can never leak a KV reservation
+            scheduler.add_admit_gate(self._shed_gate)
         backend.attach(self)
 
     # ------------------------------------------------------------------ api
     def submit(self, requests: Sequence[Request]) -> None:
+        self._check_alive()
+        if not self._deadlines_seen:
+            self._deadlines_seen = any(r.deadline is not None
+                                       for r in requests)
         self._pending = deque(sorted([*self._pending, *requests],
                                      key=lambda r: r.arrival_time))
+
+    # ------------------------------------------------------- crash lifecycle
+    def _check_alive(self) -> None:
+        if self._crashed:
+            raise ReplicaCrashed("serving core is down")
+
+    def inject_crash(self) -> None:
+        """Mark this core dead without unwinding it — the next probe, submit,
+        or tick raises :class:`ReplicaCrashed` (how a fault schedule or test
+        kills a replica between steps)."""
+        self._crashed = True
+
+    def crash(self) -> List[Request]:
+        """Kill this core and extract every request it was responsible for.
+
+        Crash semantics: all KV on this replica is lost. Running requests'
+        reservations and backend residency are released, partial prefill
+        progress is discarded (failover is recompute-from-prompt), and the
+        prefix cache is cleared cold — its committed blocks point at memory
+        that no longer exists, so they must stop being hitable (backends
+        drop their fragments via the evict listeners). The allocator object
+        itself survives (backends hold references to it); only its contents
+        reset. Returns the lost requests, in pending → waiting → running
+        order, for the router to fail over."""
+        self._crashed = True
+        sched = self.scheduler
+        lost = [*self._pending, *sched.waiting, *sched.running]
+        for r in sched.running:
+            self.allocator.free(r.req_id)
+            self.backend.release(r)
+        for r in lost:
+            r.prefilled_tokens = 0
+            r.prefill_target = None
+        self._pending.clear()
+        sched.waiting.clear()
+        sched.running.clear()
+        self._reject_pending.clear()
+        self._shed_marked.clear()
+        self.allocator.clear_cache()
+        self._hash_memo.clear()
+        self._overload_steps = 0
+        self._shed_active = False
+        return lost
+
+    def restart(self) -> None:
+        """Rejoin cold after :meth:`crash`: the core accepts work again with
+        an empty cache — exactly a fresh replica, minus construction cost."""
+        self._crashed = False
 
     def decode_ready(self, req: Request) -> bool:
         """True once a request's whole prompt is KV-resident (it may join
@@ -262,21 +388,25 @@ class ServingCore:
     # -------------------------------------------------------- router probes
     # Read-only observations a multi-replica front-end routes by. None of
     # them mutate request or allocator state: a probed request may well be
-    # routed to a different replica.
+    # routed to a different replica. Every probe checks liveness first —
+    # probe failure (``ReplicaCrashed``) is the router's failure detector.
     def queue_depth(self) -> int:
         """Unfinished requests this core is responsible for: routed but not
         yet arrived, waiting, and running."""
+        self._check_alive()
         return (len(self._pending) + len(self.scheduler.waiting)
                 + len(self.scheduler.running))
 
     def kv_used_blocks(self) -> int:
         """Distinct KV blocks currently referenced (shared blocks once)."""
+        self._check_alive()
         return self.allocator.used_blocks
 
     def kv_pressure(self) -> float:
         """Referenced fraction of the KV budget, in [0, 1]. Unbounded
         allocators report 0.0 — rank those replicas by
         :meth:`kv_used_blocks` instead."""
+        self._check_alive()
         if self.allocator.total_blocks >= UNBOUNDED_BLOCKS:
             return 0.0
         return self.allocator.used_blocks / self.allocator.total_blocks
@@ -295,6 +425,7 @@ class ServingCore:
         never the stale arrival score — so routing pressure decays as a
         replica's long requests approach completion, in lockstep with the
         keys its own scheduler ranks by."""
+        self._check_alive()
         total = 0.0
         for r in (*self._pending, *self.scheduler.waiting,
                   *self.scheduler.running):
@@ -313,6 +444,7 @@ class ServingCore:
         caching is off. Deliberately unmemoized (unlike
         :meth:`_prefix_hashes`): the request may be routed elsewhere, and a
         stale memo entry on a non-chosen replica would never be reclaimed."""
+        self._check_alive()
         if not self.prefix_caching:
             return 0
         chain = prefix_chunk_hashes(self.backend.prefix_tokens(req),
@@ -327,6 +459,7 @@ class ServingCore:
         otherwise, ``+inf`` when fully drained. The router advances the
         replica with the earliest next event (discrete-event order across
         replicas)."""
+        self._check_alive()
         if self.scheduler.has_work:
             return self.clock.now()
         if self._pending:
@@ -380,7 +513,17 @@ class ServingCore:
         cached offset."""
         need = self._admission_need(req)
         hashes = self._prefix_hashes(req)
+        if self.allocator.blocks_for(need) > self.allocator.total_blocks:
+            # Certain infeasibility: the request's own block table would
+            # exceed the whole cache — no amount of draining (or prefix
+            # sharing, which reduces new claims but not table length) can
+            # ever admit it. Deferring would wedge the loop forever; mark it
+            # for terminal rejection (swept after this scheduling cycle).
+            req.gate_rejections += 1
+            self._reject_pending.append(req)
+            return False
         if not self.allocator.can_allocate(need, hashes):
+            req.gate_rejections += 1
             return False
         shared = self.allocator.allocate(req.req_id, need, hashes)
         if self.kv_reservation == "incremental":
@@ -415,6 +558,126 @@ class ServingCore:
             self.backend.release(r)
             self._hash_memo.pop(r.req_id, None)
             self.finished.append(r)
+
+    # ------------------------------------------------ drops (terminal exits)
+    def _drop(self, req: Request, now: float, state: RequestState,
+              reason: str) -> None:
+        """Terminal non-success exit: the request leaves the system for good.
+        Any held resources are released (no-ops for never-admitted work)."""
+        self.allocator.free(req.req_id)
+        self.backend.release(req)
+        req.state = state
+        req.drop_reason = reason
+        req.finish_time = now
+        self._hash_memo.pop(req.req_id, None)
+        self.dropped.append(req)
+
+    def _drop_from_waiting(self, reqs: List[Request], now: float,
+                           state: RequestState, reason: str) -> None:
+        ids = {id(r) for r in reqs}
+        self.scheduler.waiting = [r for r in self.scheduler.waiting
+                                  if id(r) not in ids]
+        for r in reqs:
+            self._drop(r, now, state, reason)
+
+    def _sweep_marked(self, now: float) -> None:
+        """Finalize requests the admission gates marked this cycle (they
+        stayed in W through the scan; the scan must not mutate the queue it
+        iterates)."""
+        if self._reject_pending:
+            self.infeasible_rejections += len(self._reject_pending)
+            self._drop_from_waiting(self._reject_pending, now,
+                                    RequestState.REJECTED, "kv-infeasible")
+            self._reject_pending = []
+        if self._shed_marked:
+            self.shed_count += len(self._shed_marked)
+            self._drop_from_waiting(self._shed_marked, now,
+                                    RequestState.SHED, "overload")
+            self._shed_marked = []
+
+    # ------------------------------------------------------------- deadlines
+    def _estimate_len(self, req: Request) -> Optional[float]:
+        """Best current output-length estimate: the refreshed remaining
+        estimate, else the predictor score. ``None`` when the run has no
+        basis (unscored under fcfs) — estimate-gated decisions then skip."""
+        if req.remaining_est is not None:
+            return req.remaining_est
+        if req.scored:
+            return req.score
+        return None
+
+    def _enforce_deadlines(self, now: float) -> None:
+        """Cancel past-deadline work (terminal ``CANCELLED``): in-flight
+        requests free their blocks and backend residency mid-stream; waiting
+        requests are also cancelled *pre-admission* when
+        ``deadline_time_per_token`` says their predicted service time
+        already overruns the deadline — admitting them would only burn
+        prefill the SLO can never credit."""
+        expired_r = [r for r in self.scheduler.running
+                     if r.deadline is not None and now > r.deadline]
+        for r in expired_r:
+            self.scheduler.running.remove(r)
+            self._drop(r, now, RequestState.CANCELLED, "deadline")
+        tpt = self.deadline_time_per_token
+        expired_w = []
+        for r in self.scheduler.waiting:
+            if r.deadline is None:
+                continue
+            if now > r.deadline:
+                expired_w.append(r)
+            elif tpt is not None:
+                est = self._estimate_len(r)
+                if est is not None and now + tpt * est > r.deadline:
+                    expired_w.append(r)
+        if expired_w:
+            self._drop_from_waiting(expired_w, now, RequestState.CANCELLED,
+                                    "deadline")
+        self.deadline_cancels += len(expired_r) + len(expired_w)
+
+    # ---------------------------------------------------------- load shedding
+    def _update_shedding(self, now: float) -> None:
+        """Sustained-overload detection + tail shedding. Overload = queue
+        depth over ``shed_queue_depth`` and/or KV pressure over
+        ``shed_kv_pressure`` for ``shed_sustain_steps`` *consecutive* steps
+        (a one-step burst never sheds). While active, the worst-ranked
+        non-boosted waiting requests are shed: down to the queue-depth
+        target when that trigger fired, one per step under pure KV pressure.
+        Boosted (starvation-pinned) requests are never shed."""
+        over_queue = (self.shed_queue_depth is not None
+                      and len(self.scheduler.waiting) > self.shed_queue_depth)
+        over_kv = (self.shed_kv_pressure is not None
+                   and self.kv_pressure() >= self.shed_kv_pressure)
+        self._overload_steps = (self._overload_steps + 1
+                                if (over_queue or over_kv) else 0)
+        self._shed_active = self._overload_steps >= self.shed_sustain_steps
+        if not self._shed_active:
+            return
+        sheddable = sorted((r for r in self.scheduler.waiting
+                            if not r.boosted),
+                           key=self.scheduler._sort_key)
+        if over_queue:
+            n = len(self.scheduler.waiting) - self.shed_queue_depth
+        else:
+            n = 1
+        victims = sheddable[len(sheddable) - min(n, len(sheddable)):]
+        if victims:
+            self.shed_count += len(victims)
+            self._drop_from_waiting(victims, now, RequestState.SHED,
+                                    "overload")
+
+    def _shed_gate(self, req: Request) -> bool:
+        """Admission gate (composed via ``Scheduler.add_admit_gate``, so it
+        runs before the KV hook reserves anything): while overload shedding
+        is active, refuse work predicted longer than
+        ``shed_predicted_tokens`` — under overload, admitting a long request
+        delays every queued short one behind it."""
+        if not self._shed_active or req.boosted:
+            return True
+        est = self._estimate_len(req)
+        if est is not None and est >= self.shed_predicted_tokens:
+            self._shed_marked.append(req)
+            return False
+        return True
 
     # ----------------------------------------------------------------- loop
     def _plan_chunks(self) -> List[PrefillChunk]:
@@ -502,14 +765,30 @@ class ServingCore:
                 if delta <= 0 or self.allocator.grow(r.req_id, delta):
                     break
                 r.grow_failures = (r.grow_failures or 0) + 1
+                if self.allocator.free_blocks >= delta:
+                    # Denied despite sufficient free capacity: the denial is
+                    # not memory pressure (an injected grow storm), so
+                    # evicting victims cannot help — self-preempt with
+                    # recompute semantics and retry on re-admission.
+                    # Unreachable without faults: ``grow`` fails only when
+                    # ``delta`` exceeds free (incl. LRU-parked) blocks.
+                    self._preempt_for_grow(r)
+                    break
                 victim = self._grow_victim(r)
                 if victim is None:
-                    raise MemoryError(
-                        f"KV budget cannot sustain request {r.req_id} even "
-                        f"alone: needs {self.allocator.blocks_for(need)} "
-                        f"blocks of {self.allocator.block_size}, cache has "
-                        f"{self.allocator.total_blocks} "
-                        f"({self.allocator.free_blocks} free)")
+                    if (self.allocator.blocks_for(need)
+                            > self.allocator.total_blocks):
+                        raise MemoryError(
+                            f"KV budget cannot sustain request {r.req_id} "
+                            f"even alone: needs "
+                            f"{self.allocator.blocks_for(need)} "
+                            f"blocks of {self.allocator.block_size}, cache "
+                            f"has {self.allocator.total_blocks} "
+                            f"({self.allocator.free_blocks} free)")
+                    # Transient denial with nobody to evict while feasible
+                    # alone — same storm-shaped cause, same recovery.
+                    self._preempt_for_grow(r)
+                    break
                 self._preempt_for_grow(victim)
 
     def _maybe_rerank(self, now: float) -> None:
@@ -536,11 +815,22 @@ class ServingCore:
         return self.scheduler.rerank_count
 
     def step(self, now: float) -> float:
-        """One mixed serving cycle: admit → prefill ≤ chunk tokens → one
-        decode token for every fully prefilled running request → retire."""
+        """One mixed serving cycle: fault hook → deadlines/shedding → admit
+        → prefill ≤ chunk tokens → one decode token for every fully
+        prefilled running request → retire. Every fault-tolerance stage is
+        a no-op (a flag test) unless its feature was configured."""
+        self.step_count += 1
+        if self.fault_hook is not None:
+            self.fault_hook(self, now)
+        if self._deadlines_seen:
+            self._enforce_deadlines(now)
+        if self._shed_enabled:
+            self._update_shedding(now)
         self._maybe_rerank(now)
         self._steps_since_rerank += 1
         self.scheduler.schedule(now)
+        if self._reject_pending or self._shed_marked:
+            self._sweep_marked(now)
         chunks = self._plan_chunks()
         if chunks:
             now = self.backend.prefill(chunks, now)
@@ -576,7 +866,11 @@ class ServingCore:
         Raises ``MemoryError`` when the core is wedged: the KV gate rejects
         every waiting request, nothing is executing, and no future arrival
         exists that could drain first (admission depends only on allocator
-        state, so a wedge with an empty pending deque is permanent)."""
+        state, so a wedge with an empty pending deque is permanent). With
+        gate-time infeasibility rejection this is a defensive dead path —
+        a request that can never fit exits terminally ``REJECTED`` at its
+        first admission scan instead of wedging the loop."""
+        self._check_alive()
         if not (self._pending or self.scheduler.has_work):
             return None
         now = self.clock.now()
@@ -590,12 +884,14 @@ class ServingCore:
             return self.clock.now()
         running_before = bool(self.scheduler.running)
         finished_before = len(self.finished)
+        dropped_before = len(self.dropped)
         new_now = self.step(now)
         if on_step is not None:
             on_step(self, new_now)
         progressed = (new_now != now or running_before
                       or self.scheduler.running
-                      or len(self.finished) > finished_before)
+                      or len(self.finished) > finished_before
+                      or len(self.dropped) > dropped_before)
         if not progressed:
             # KV gate rejected everything and nothing is executing
             if self._pending:

@@ -859,7 +859,8 @@ class Engine:
                  rerank_interval: Optional[float] = None,
                  rerank_every_steps: Optional[int] = None,
                  rerank_floor: float = 0.0,
-                 rerank_pin_after: int = 3):
+                 rerank_pin_after: int = 3,
+                 **core_kw):
         if paged is None:
             # auto: block-structured KV exists exactly for attention-family
             # append caches; recurrent/enc-dec/sliding-window lanes keep the
@@ -884,7 +885,8 @@ class Engine:
                                 rerank_interval=rerank_interval,
                                 rerank_every_steps=rerank_every_steps,
                                 rerank_floor=rerank_floor,
-                                rerank_pin_after=rerank_pin_after)
+                                rerank_pin_after=rerank_pin_after,
+                                **core_kw)
 
     # -------------------------------------------------------------------- api
     @property
@@ -920,8 +922,11 @@ def serve(cfg: ModelConfig, params, requests: Sequence[Request], policy, *,
           paged: Optional[bool] = None,
           kv_reservation: str = "full",
           rerank_interval: Optional[float] = None,
-          rerank_every_steps: Optional[int] = None) -> LatencyReport:
-    """Convenience wrapper: fresh engine + scheduler, serve, report."""
+          rerank_every_steps: Optional[int] = None,
+          **core_kw) -> LatencyReport:
+    """Convenience wrapper: fresh engine + scheduler, serve, report. Extra
+    keywords forward to the serving core (deadlines, shedding, …); dropped
+    requests are counted in the report, never silently lost."""
     sched = Scheduler(policy=policy, max_batch=max_batch,
                       starvation_threshold=starvation_threshold)
     allocator = BlockAllocator(kv_blocks, 16) if kv_blocks else None
@@ -931,10 +936,14 @@ def serve(cfg: ModelConfig, params, requests: Sequence[Request], policy, *,
                  prefix_caching=prefix_caching, paged=paged,
                  kv_reservation=kv_reservation,
                  rerank_interval=rerank_interval,
-                 rerank_every_steps=rerank_every_steps)
+                 rerank_every_steps=rerank_every_steps,
+                 **core_kw)
     eng.submit(requests)
     finished = eng.run(time_scale=time_scale, log_every=log_every)
-    assert len(finished) == len(requests), (len(finished), len(requests))
+    dropped = eng.core.dropped
+    assert len(finished) + len(dropped) == len(requests), \
+        (len(finished), len(dropped), len(requests))
     reranked = rerank_interval is not None or rerank_every_steps is not None
     return report(policy.name, finished,
-                  reranks=eng.core.rerank_count if reranked else None)
+                  reranks=eng.core.rerank_count if reranked else None,
+                  dropped=dropped if dropped else None)

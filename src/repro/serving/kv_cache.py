@@ -256,3 +256,17 @@ class BlockAllocator:
         into the free pool immediately."""
         for b in self._req_blocks.pop(req_id, ()):
             self._decref(b)
+
+    def clear_cache(self) -> int:
+        """Drop every LRU-parked cached block (crash/cold-restart semantics:
+        the replica's KV memory is gone, so its warm prefixes must stop
+        being hitable). Fires the evict listeners for each dropped hash so
+        backends discard their fragments in lockstep; live reservations are
+        untouched — callers free those per request first. Returns the number
+        of blocks dropped."""
+        n = 0
+        while self._lru:
+            b, _ = self._lru.popitem(last=False)
+            self._release(b)
+            n += 1
+        return n

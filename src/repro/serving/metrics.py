@@ -58,6 +58,19 @@ class LatencyReport:
     # counters only exist when a rerank cadence was configured)
     reranks: float = float("nan")               # priority-key refreshes
     rerank_preemptions: float = float("nan")    # evictions in refreshed cycles
+    # Fault tolerance (NaN when the run had no fault layer — no deadlines,
+    # no shedding config, no fault schedule; pass ``dropped`` to ``report``
+    # to activate them, even as an empty list → true zeros)
+    dropped_total: float = float("nan")         # all terminal non-success exits
+    deadline_cancelled: float = float("nan")    # CANCELLED (deadline expiry)
+    shed: float = float("nan")                  # SHED (overload shedding)
+    rejected: float = float("nan")              # REJECTED (KV-infeasible)
+    failed: float = float("nan")                # FAILED (failover budget)
+    failovers: float = float("nan")             # crash re-dispatches absorbed
+    # Predictor degradation ladder (NaN unless the policy counters are passed)
+    scorer_failures: float = float("nan")       # failed scorer dispatches
+    predictor_degradations: float = float("nan")  # SJF → FCFS transitions
+    predictor_recoveries: float = float("nan")    # FCFS → SJF recoveries
 
     def row(self) -> str:
         return (f"{self.policy:10s} n={self.n_requests:5d} "
@@ -96,14 +109,56 @@ def itl_samples(finished: Sequence[Request]) -> np.ndarray:
     return np.asarray(samples, dtype=float)
 
 
+def _fault_fields(dropped: Optional[Sequence[Request]],
+                  scorer_failures: Optional[int],
+                  degradations: Optional[int],
+                  recoveries: Optional[int]) -> dict:
+    """Fault-tolerance counter fields for :class:`LatencyReport`. ``None``
+    inputs report NaN (the run had no fault layer); a passed-but-empty
+    ``dropped`` reports true zeros — "fault tolerance was on, nothing was
+    dropped" is a result, not an absence."""
+    out = {}
+    if dropped is not None:
+        by_reason = {}
+        fos = 0.0
+        for r in dropped:
+            by_reason[r.drop_reason] = by_reason.get(r.drop_reason, 0) + 1
+            fos += r.failovers or 0
+        out.update(
+            dropped_total=float(len(dropped)),
+            deadline_cancelled=float(by_reason.get("deadline", 0)),
+            shed=float(by_reason.get("overload", 0)),
+            rejected=float(by_reason.get("kv-infeasible", 0)),
+            failed=float(by_reason.get("failover-budget", 0)),
+            failovers=fos,
+        )
+    if scorer_failures is not None:
+        out["scorer_failures"] = float(scorer_failures)
+    if degradations is not None:
+        out["predictor_degradations"] = float(degradations)
+    if recoveries is not None:
+        out["predictor_recoveries"] = float(recoveries)
+    return out
+
+
 def report(policy: str, finished: Sequence[Request], *,
-           reranks: Optional[float] = None) -> LatencyReport:
+           reranks: Optional[float] = None,
+           dropped: Optional[Sequence[Request]] = None,
+           scorer_failures: Optional[int] = None,
+           degradations: Optional[int] = None,
+           recoveries: Optional[int] = None) -> LatencyReport:
     """``reranks`` — core-level count of priority-key refreshes for the run
     that produced ``finished`` (``ServingCore.rerank_count``); ``None``
-    (default) reports NaN, the "run never re-ranked" convention."""
+    (default) reports NaN, the "run never re-ranked" convention.
+    ``dropped`` — terminally dropped requests (cancelled / shed / rejected /
+    failed); latency stats are computed over ``finished`` only (a dropped
+    request has no completion latency), the drop counters over ``dropped``.
+    The scorer/degradation counters come from the policy's fault ladder
+    (``Policy.scorer_failures`` etc.); ``None`` = no fault layer = NaN."""
+    faults = _fault_fields(dropped, scorer_failures, degradations, recoveries)
     if not finished:
-        # every field NaN, including makespan/throughput: a replica that
-        # served nothing has no makespan, and a literal 0.0 would skew
+        # every latency field NaN, including makespan/throughput: a replica
+        # that served nothing has no makespan, and a literal 0.0 would skew
         # cross-replica min/mean comparisons the router report makes
         # (NaN means "absent" everywhere else in this report)
         return LatencyReport(policy=policy, n_requests=0,
@@ -111,7 +166,7 @@ def report(policy: str, finished: Sequence[Request], *,
                              p90_per_token_latency=float("nan"),
                              avg_ttft=float("nan"), makespan=float("nan"),
                              throughput_tok_s=float("nan"),
-                             mean_wait=float("nan"))
+                             mean_wait=float("nan"), **faults)
     per_tok = np.array([r.per_token_latency() for r in finished])
     ttft = np.array([(r.first_token_time - r.arrival_time) for r in finished
                      if r.first_token_time is not None])
@@ -149,6 +204,7 @@ def report(policy: str, finished: Sequence[Request], *,
         reranks=float(reranks) if reranks is not None else float("nan"),
         rerank_preemptions=float(rrank.sum()) if len(rrank)
         else float("nan"),
+        **faults,
     )
 
 
@@ -185,6 +241,12 @@ class RouterReport:
     # KV-gate deferrals re-tried on later cycles); () when the run did not
     # go through a router that counts them.
     admit_attempts: Tuple[int, ...] = ()
+    # Fault tolerance (empty tuples / NaN when the run had no fault layer):
+    # per-replica crash and cold-restart counts, and router-level failover /
+    # escape re-dispatches. The pooled drop counters live on ``aggregate``.
+    crashes: Tuple[int, ...] = ()
+    restarts: Tuple[int, ...] = ()
+    failover_redispatches: float = float("nan")
 
     def row(self) -> str:
         return (f"{self.policy:24s} n={self.n_requests:6d} "
@@ -206,13 +268,20 @@ def _imbalance(counts: Sequence[int]) -> float:
 def router_report(policy: str,
                   per_replica_finished: Sequence[Sequence[Request]],
                   admit_attempts: Sequence[int] = (),
-                  reranks: Optional[float] = None) -> RouterReport:
+                  reranks: Optional[float] = None,
+                  dropped: Optional[Sequence[Request]] = None,
+                  crashes: Optional[Sequence[int]] = None,
+                  restarts: Optional[Sequence[int]] = None,
+                  redispatches: Optional[int] = None) -> RouterReport:
     """NaN-safe aggregation of N replicas' finished requests (any of which
     may be empty) into one :class:`RouterReport`. ``reranks`` — total
     priority-key refreshes across replicas, ``None`` when no replica
-    re-ranked (reported NaN, like every other absent counter)."""
+    re-ranked (reported NaN, like every other absent counter). The fault
+    parameters (``dropped`` / ``crashes`` / ``restarts`` /
+    ``redispatches``) follow the same convention: ``None`` = no fault
+    layer = NaN/empty."""
     pooled = [r for fin in per_replica_finished for r in fin]
-    agg = report(policy, pooled, reranks=reranks)
+    agg = report(policy, pooled, reranks=reranks, dropped=dropped)
     per = tuple(report(f"{policy}/r{i}", fin)
                 for i, fin in enumerate(per_replica_finished))
     counts = tuple(len(fin) for fin in per_replica_finished)
@@ -232,4 +301,8 @@ def router_report(policy: str,
         routed_ttft_mean_s=agg.avg_ttft,
         routed_ttft_p99_s=agg.p99_ttft,
         admit_attempts=tuple(admit_attempts),
+        crashes=tuple(crashes) if crashes is not None else (),
+        restarts=tuple(restarts) if restarts is not None else (),
+        failover_redispatches=(float(redispatches)
+                               if redispatches is not None else float("nan")),
     )

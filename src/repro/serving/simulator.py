@@ -76,9 +76,11 @@ class SimBackend:
         return req.prompt_len + req.true_length
 
     def prefill_total(self, req: Request) -> int:
-        # recompute preemption: a re-admitted request re-prefills its prompt
-        # plus everything it had already generated (vLLM recompute semantics)
-        return req.prompt_len + (req.tokens_done if req.preempt_count else 0)
+        # recompute semantics: a request re-admitted after preemption — or
+        # re-dispatched after a replica crash (failover) — re-prefills its
+        # prompt plus everything it had already generated
+        recompute = req.preempt_count or (req.failovers or 0)
+        return req.prompt_len + (req.tokens_done if recompute else 0)
 
     def prefix_tokens(self, req: Request) -> Sequence[int]:
         """Prefix-sharing stream: the prompt's word-hash ids, truncated to
@@ -112,44 +114,48 @@ class SimBackend:
         pass                          # no slot residency to free
 
 
+def make_sim_core(scheduler: Scheduler, *, cost: CostModel = CostModel(),
+                  kv_blocks: Optional[int] = None, block_size: int = 16,
+                  **core_kw) -> ServingCore:
+    """One fresh simulated serving core: its own allocator (``kv_blocks``
+    bounded, or unbounded), ``SimBackend`` and ``VirtualClock``. Every
+    remaining keyword forwards to :class:`~repro.serving.core.ServingCore`
+    verbatim (chunking, caching, reservation mode, re-ranking cadence,
+    deadlines, shedding, …) — one construction path for every sim entry
+    point, so new core features never need plumbing here again."""
+    allocator = (BlockAllocator(kv_blocks, block_size) if kv_blocks
+                 else BlockAllocator.unbounded(block_size))
+    return ServingCore(scheduler, SimBackend(cost), allocator=allocator,
+                       clock=VirtualClock(), **core_kw)
+
+
 def simulate(requests: Sequence[Request], scheduler: Scheduler, *,
              cost: CostModel = CostModel(), max_time: float = 1e7,
              kv_blocks: Optional[int] = None, block_size: int = 16,
-             prefill_chunk_tokens: Optional[int] = None,
-             prefix_caching: bool = False,
-             kv_reservation: str = "full",
-             record_token_times: bool = False,
-             rerank_interval: Optional[float] = None,
-             rerank_every_steps: Optional[int] = None,
-             rerank_floor: float = 0.0,
-             rerank_pin_after: int = 3,
-             on_step=None) -> List[Request]:
+             faults=None, on_step=None, **core_kw) -> List[Request]:
     """Run to completion; returns the finished requests (with timestamps).
+    Terminally dropped requests (deadline cancels, shed, rejected) are NOT
+    in the return — single-core callers that enable those features should
+    build the core via :func:`make_sim_core` and read ``core.dropped``.
 
     ``kv_blocks`` bounds the KV cache (in ``block_size``-token blocks);
     ``None`` keeps the historical memory-unbounded behaviour.
-    ``prefill_chunk_tokens`` enables mixed prefill/decode iterations and
-    ``prefix_caching`` shares KV blocks across common prompt prefixes
-    (see :class:`~repro.serving.core.ServingCore`) — a cache-hit admission
-    only charges the non-shared suffix's prefill tokens.
-    ``kv_reservation="incremental"`` admits on prompt + one decode block and
-    grows per step (the paged-KV admission policy); the accounting is the
-    shared core's, so decisions mirror the real engine's exactly.
-    ``rerank_interval`` / ``rerank_every_steps`` enable iterative
-    re-ranking: priority keys refresh to predicted *remaining* length on
-    that cadence (virtual seconds / serving cycles)."""
-    allocator = (BlockAllocator(kv_blocks, block_size) if kv_blocks
-                 else BlockAllocator.unbounded(block_size))
-    core = ServingCore(scheduler, SimBackend(cost), allocator=allocator,
-                       clock=VirtualClock(),
-                       prefill_chunk_tokens=prefill_chunk_tokens,
-                       prefix_caching=prefix_caching,
-                       kv_reservation=kv_reservation,
-                       record_token_times=record_token_times,
-                       rerank_interval=rerank_interval,
-                       rerank_every_steps=rerank_every_steps,
-                       rerank_floor=rerank_floor,
-                       rerank_pin_after=rerank_pin_after)
+    Every extra keyword forwards to ``ServingCore``: notably
+    ``prefill_chunk_tokens`` (mixed prefill/decode iterations),
+    ``prefix_caching`` (share KV blocks across common prompt prefixes — a
+    cache-hit admission only charges the non-shared suffix),
+    ``kv_reservation="incremental"`` (admit on prompt + one decode block,
+    grow per step), ``rerank_interval`` / ``rerank_every_steps``
+    (iterative re-ranking), and the fault-tolerance knobs
+    (``deadline_time_per_token``, ``shed_queue_depth``, …).
+    ``faults`` — a :class:`~repro.serving.faults.FaultSchedule` to attach
+    (arrival skew applied to ``requests`` in place, per-step faults hooked
+    onto the core)."""
+    core = make_sim_core(scheduler, cost=cost, kv_blocks=kv_blocks,
+                         block_size=block_size, **core_kw)
+    if faults is not None:
+        faults.skew_arrivals(requests)
+        faults.attach_core(core)
     core.submit(requests)
     return core.run(max_time=max_time, on_step=on_step)
 
@@ -160,37 +166,21 @@ def make_sim_replicas(n: int, policy_factory: Callable[[], object], *,
                       max_batch: int = 16,
                       starvation_threshold: float = 120.0,
                       preemption: bool = False,
-                      prefill_chunk_tokens: Optional[int] = None,
-                      prefix_caching: bool = False,
-                      kv_reservation: str = "full",
-                      record_token_times: bool = False,
-                      rerank_interval: Optional[float] = None,
-                      rerank_every_steps: Optional[int] = None,
-                      rerank_floor: float = 0.0,
-                      rerank_pin_after: int = 3
-                      ) -> List[ServingCore]:
+                      **core_kw) -> List[ServingCore]:
     """N independent sim replicas: each gets a fresh scheduler (via
     ``policy_factory`` — a zero-arg callable so stateful scorers are not
     accidentally shared), its own ``kv_blocks``-bounded allocator, its own
     ``SimBackend`` and ``VirtualClock``. Replicas share *nothing*; the
-    router is the only thing that sees them together."""
+    router is the only thing that sees them together. Extra keywords
+    forward to each ``ServingCore`` (chunking, caching, re-ranking,
+    deadlines, shedding, …)."""
     cores = []
     for _ in range(n):
-        allocator = (BlockAllocator(kv_blocks, block_size) if kv_blocks
-                     else BlockAllocator.unbounded(block_size))
         sched = Scheduler(policy=policy_factory(), max_batch=max_batch,
                           starvation_threshold=starvation_threshold,
                           preemption=preemption)
-        cores.append(ServingCore(sched, SimBackend(cost),
-                                 allocator=allocator, clock=VirtualClock(),
-                                 prefill_chunk_tokens=prefill_chunk_tokens,
-                                 prefix_caching=prefix_caching,
-                                 kv_reservation=kv_reservation,
-                                 record_token_times=record_token_times,
-                                 rerank_interval=rerank_interval,
-                                 rerank_every_steps=rerank_every_steps,
-                                 rerank_floor=rerank_floor,
-                                 rerank_pin_after=rerank_pin_after))
+        cores.append(make_sim_core(sched, cost=cost, kv_blocks=kv_blocks,
+                                   block_size=block_size, **core_kw))
     return cores
 
 
@@ -198,18 +188,32 @@ def simulate_replicas(requests: Sequence[Request], *, n_replicas: int,
                       policy_factory: Callable[[], object],
                       routing: str = "round_robin",
                       predicted_len=None, seed: int = 0,
+                      max_failovers: int = 3,
+                      failover_backoff_s: float = 0.5,
+                      affinity_escape_after: Optional[int] = None,
+                      faults=None,
                       **replica_kw) -> ReplicaRouter:
     """Multi-replica discrete-event run: build ``n_replicas`` fresh sim
     replicas (``replica_kw`` forwards to :func:`make_sim_replicas`), route
     ``requests`` across them with the ``routing`` policy, and drive
     everything to completion. Returns the router — finished requests,
-    per-request ``assignments``, and ``report()`` live there. Costs scale
+    per-request ``assignments``, ``all_dropped``, and ``report()`` live
+    there. ``faults`` — a :class:`~repro.serving.faults.FaultSchedule`
+    wired onto the router (per-replica crash/grow faults, restart
+    scheduling, arrival skew); the failover knobs
+    (``max_failovers`` / ``failover_backoff_s`` / ``affinity_escape_after``)
+    forward to :class:`~repro.serving.router.ReplicaRouter`. Costs scale
     with total tokens, not wall time, so ~10^5-request traces sweep all
     routing policies in seconds-to-minutes on CPU."""
     router = ReplicaRouter(make_sim_replicas(n_replicas, policy_factory,
                                              **replica_kw),
                            policy=routing, predicted_len=predicted_len,
-                           seed=seed)
+                           seed=seed, max_failovers=max_failovers,
+                           failover_backoff_s=failover_backoff_s,
+                           affinity_escape_after=affinity_escape_after)
+    if faults is not None:
+        faults.skew_arrivals(requests)
+        faults.attach_router(router)
     router.submit(requests)
     router.run()
     return router
@@ -220,30 +224,29 @@ def run_policy(requests: Sequence[Request], policy, *, max_batch: int = 16,
                starvation_threshold: float = 120.0,
                preemption: bool = False, max_preemptions: int = 2,
                kv_blocks: Optional[int] = None,
-               prefill_chunk_tokens: Optional[int] = None,
-               prefix_caching: bool = False,
-               kv_reservation: str = "full",
                rerank_interval: Optional[float] = None,
                rerank_every_steps: Optional[int] = None,
-               rerank_floor: float = 0.0,
-               rerank_pin_after: int = 3) -> LatencyReport:
-    """Convenience: fresh scheduler + simulate + report."""
-    # deep-ish copy so one policy run doesn't pollute another
+               **core_kw) -> LatencyReport:
+    """Convenience: fresh scheduler + simulate + report. Extra keywords
+    forward to the core (chunking, caching, reservation mode, deadlines,
+    shedding); a fault-configured run's dropped requests are counted in the
+    report, never silently lost (conservation is asserted)."""
+    # deep-ish copy so one policy run doesn't pollute another (deadlines
+    # carry over — they are part of the workload, not run state)
     reqs = [Request(r.req_id, r.prompt, r.arrival_time, r.prompt_len,
-                    r.true_length) for r in requests]
+                    r.true_length, deadline=r.deadline) for r in requests]
     sched = Scheduler(policy=policy, max_batch=max_batch,
                       continuous=continuous,
                       starvation_threshold=starvation_threshold,
                       preemption=preemption, max_preemptions=max_preemptions)
-    finished = simulate(reqs, sched, cost=cost, kv_blocks=kv_blocks,
-                        prefill_chunk_tokens=prefill_chunk_tokens,
-                        prefix_caching=prefix_caching,
-                        kv_reservation=kv_reservation,
-                        rerank_interval=rerank_interval,
-                        rerank_every_steps=rerank_every_steps,
-                        rerank_floor=rerank_floor,
-                        rerank_pin_after=rerank_pin_after)
-    assert len(finished) == len(requests), (len(finished), len(requests))
+    core = make_sim_core(sched, cost=cost, kv_blocks=kv_blocks,
+                         rerank_interval=rerank_interval,
+                         rerank_every_steps=rerank_every_steps, **core_kw)
+    core.submit(reqs)
+    finished = core.run()
+    assert len(finished) + len(core.dropped) == len(requests), \
+        (len(finished), len(core.dropped), len(requests))
     reranked = rerank_interval is not None or rerank_every_steps is not None
     return report(policy.name, finished,
-                  reranks=sched.rerank_count if reranked else None)
+                  reranks=sched.rerank_count if reranked else None,
+                  dropped=core.dropped if core.dropped else None)

@@ -1,0 +1,364 @@
+"""Fault-tolerance layer: predictor degradation ladder, replica crash
+failover, per-request deadlines, overload shedding, grow storms, and the
+no-fault bit-identity guarantee (an empty fault schedule changes nothing)."""
+import math
+
+import pytest
+
+from repro.core.scheduler.policies import UNSCORED_KEY, fcfs, predictor_sjf
+from repro.core.scheduler.request import Request, RequestState
+from repro.core.scheduler.scheduler import Scheduler
+from repro.serving import (FaultSchedule, GrowStorm, ReplicaCrash,
+                           ReplicaCrashed, ScorerOutage)
+from repro.serving.metrics import report
+from repro.serving.simulator import (CostModel, make_sim_core,
+                                     make_sim_replicas, simulate,
+                                     simulate_replicas)
+
+
+def _cost():
+    return CostModel(iter_base_s=0.01, per_seq_s=0.0, prefill_per_token_s=0.0)
+
+
+def _reqs(n, plen=8, tlen=8, stagger=0.0, deadline=None):
+    return [Request(i, f"req {i} words", i * stagger, plen, tlen,
+                    deadline=deadline) for i in range(n)]
+
+
+def _len_scorer(prompts):
+    return [float(len(p)) for p in prompts]
+
+
+# ------------------------------------------------- predictor degradation unit
+class FlakyScorer:
+    """Raises for the first ``fail_first`` calls, then scores by length."""
+
+    def __init__(self, fail_first):
+        self.fail_first = fail_first
+        self.calls = 0
+
+    def __call__(self, prompts):
+        self.calls += 1
+        if self.calls <= self.fail_first:
+            raise RuntimeError(f"scorer down (call {self.calls})")
+        return _len_scorer(prompts)
+
+
+def test_policy_degrades_after_budget_and_recovers():
+    pol = predictor_sjf("pars", FlakyScorer(fail_first=2),
+                        scorer_failure_budget=2)
+    reqs = _reqs(3)
+    pol.annotate(reqs)                      # failure 1
+    assert pol.scorer_failures == 1 and not pol.degraded
+    assert pol.needs_rescore
+    pol.annotate(reqs)                      # failure 2 → budget hit
+    assert pol.degraded and pol.degradations == 1
+    # degraded: FCFS keys for everyone, scored or not
+    assert [pol.key(r) for r in reqs] == [r.arrival_time for r in reqs]
+    pol.rescore(reqs)                       # recovery probe succeeds
+    assert not pol.degraded and pol.recoveries == 1
+    pol.rescore(reqs)                       # scores the still-unscored batch
+    assert all(r.scored for r in reqs)
+    assert not pol.needs_rescore
+    assert pol.consecutive_failures == 0
+
+
+def test_unscored_requests_rank_last_only_while_failure_outstanding():
+    pol = predictor_sjf("pars", FlakyScorer(fail_first=1),
+                        scorer_failure_budget=5)
+    reqs = _reqs(2)
+    pol.annotate(reqs)                      # fails: batch left unscored
+    assert pol.key(reqs[0]) == UNSCORED_KEY
+    pol.rescore(reqs)                       # retry succeeds
+    assert pol.key(reqs[0]) == reqs[0].score != UNSCORED_KEY
+    # hand-scored requests outside any failure window keep their rank
+    fresh = predictor_sjf("pars", _len_scorer)
+    r = Request(9, "x", 0.0, 4, 4)
+    r.score, r.scored = 7.0, False
+    assert fresh.key(r) == 7.0
+
+
+def test_scorer_timeout_counts_against_budget():
+    import time
+
+    def slow(prompts):
+        time.sleep(0.05)
+        return _len_scorer(prompts)
+
+    pol = predictor_sjf("pars", slow, scorer_failure_budget=1,
+                        scorer_timeout_s=0.001)
+    pol.annotate(_reqs(1))
+    assert pol.scorer_failures == 1 and pol.degraded
+
+
+def test_degradation_end_to_end_in_simulation():
+    faults = FaultSchedule(scorer_outages=(ScorerOutage(first_call=0,
+                                                        n_calls=2),))
+    pol = predictor_sjf("pars", faults.wrap_scorer(_len_scorer),
+                        scorer_failure_budget=2)
+    reqs = _reqs(8, tlen=6, stagger=0.05)
+    fin = simulate(reqs, Scheduler(policy=pol, max_batch=4), cost=_cost(),
+                   faults=faults)
+    assert len(fin) == 8                      # outage never loses a request
+    assert faults.injected_scorer_faults == 2
+    assert pol.degradations == 1 and pol.recoveries == 1
+    assert not pol.degraded                   # healed before the run ended
+    # requests still waiting at recovery (and all later arrivals) were
+    # scored; only work admitted *during* the outage may stay unscored
+    assert sum(r.scored for r in fin) >= 4
+    rep = report("pars", fin, scorer_failures=pol.scorer_failures,
+                 degradations=pol.degradations, recoveries=pol.recoveries)
+    assert rep.scorer_failures == 2.0
+    assert rep.predictor_degradations == 1.0
+    assert rep.predictor_recoveries == 1.0
+    # fault counters stay NaN-absent for a run with no fault layer
+    assert math.isnan(report("pars", fin).scorer_failures)
+
+
+# ------------------------------------------------------------ crash / failover
+def test_crash_failover_conserves_requests():
+    faults = FaultSchedule(crashes=(ReplicaCrash(replica=0, at_step=4,
+                                                 down_events=40),))
+    reqs = _reqs(24, tlen=6, stagger=0.02)
+    rt = simulate_replicas(reqs, n_replicas=2, policy_factory=fcfs,
+                           routing="round_robin", cost=_cost(),
+                           faults=faults)
+    assert faults.injected_crashes == 1
+    assert rt.crash_count[0] == 1 and rt.restarts[0] == 1
+    fin, dropped = rt.finished, rt.all_dropped
+    assert len(fin) + len(dropped) == len(reqs)          # conservation
+    assert all(r.tokens_done == r.true_length for r in fin)
+    # the crashed replica's in-flight work was re-dispatched and absorbed
+    assert rt.redispatches >= 1
+    assert sum(r.failovers or 0 for r in fin) >= 1
+    rep = rt.report()
+    assert rep.crashes == (1, 0) and rep.restarts == (1, 0)
+    assert rep.failover_redispatches >= 1
+
+
+def test_failover_budget_exhaustion_is_terminal_failed():
+    cores = make_sim_replicas(2, fcfs, cost=_cost(), kv_blocks=None,
+                              block_size=16)
+    rt = __import__("repro.serving.router",
+                    fromlist=["ReplicaRouter"]).ReplicaRouter(
+        cores, policy="round_robin", max_failovers=1, failover_backoff_s=0.0)
+    req = Request(0, "doomed", 0.0, 8, 8)
+    rt.submit([req])
+    assert rt.step()                          # dispatches to replica 0
+    idx = rt.assignments[0]
+    rt._fail_replica(idx)                     # crash 1: retry queued
+    assert req.failovers == 1 and req in rt._retry
+    rt.restart_replica(idx)
+    while rt._retry:                          # drain the backoff queue
+        assert rt.step()
+    idx2 = rt.assignments[0]
+    rt._fail_replica(idx2)                    # crash 2: budget exhausted
+    assert req.state is RequestState.FAILED
+    assert req.drop_reason == "failover-budget"
+    assert rt.dropped == [req] and req not in rt._retry
+    rt.restart_replica(idx2)
+    assert rt.run() == []                     # drains clean, nothing lost
+    assert len(rt.finished) + len(rt.all_dropped) == 1
+
+
+def test_exponential_backoff_on_repeated_failover():
+    cores = make_sim_replicas(2, fcfs, cost=_cost(), kv_blocks=None,
+                              block_size=16)
+    from repro.serving.router import ReplicaRouter
+    rt = ReplicaRouter(cores, policy="round_robin", max_failovers=5,
+                       failover_backoff_s=0.5)
+    req = Request(0, "bouncy", 0.0, 8, 8)
+    rt.submit([req])
+    rt.step()
+    t0 = cores[rt.assignments[0]].clock.now()
+    rt._fail_replica(rt.assignments[0])
+    assert req.route_after == pytest.approx(t0 + 0.5)     # 0.5 · 2^0
+    req.failovers = 2                                      # as if crash #2 hit
+    rt.restart_replica([i for i, h in enumerate(rt.healthy) if not h][0])
+    while 0 not in rt.assignments:                         # retry re-routes
+        assert rt.step()
+    idx = rt.assignments[0]
+    t1 = cores[idx].clock.now()
+    rt._fail_replica(idx)                                  # crash #3
+    assert req.route_after == pytest.approx(t1 + 0.5 * 2 ** 2)
+
+
+def test_crashed_core_probes_raise():
+    core = make_sim_core(Scheduler(policy=fcfs(), max_batch=2), cost=_cost())
+    core.inject_crash()
+    for probe in (core.queue_depth, core.kv_pressure, core.tick):
+        with pytest.raises(ReplicaCrashed):
+            probe()
+    core.restart()
+    assert core.queue_depth() == 0            # alive again
+
+
+# ----------------------------------------------------------------- deadlines
+def test_in_flight_deadline_cancellation():
+    reqs = [Request(0, "slow one", 0.0, 8, 50, deadline=0.2),
+            Request(1, "quick", 0.0, 8, 5)]
+    core = make_sim_core(Scheduler(policy=fcfs(), max_batch=2), cost=_cost())
+    core.submit(reqs)
+    fin = core.run()
+    assert [r.req_id for r in fin] == [1]
+    assert len(core.dropped) == 1
+    r = core.dropped[0]
+    assert r.state is RequestState.CANCELLED and r.drop_reason == "deadline"
+    assert 0 < r.tokens_done < r.true_length   # cancelled mid-decode
+    assert core.deadline_cancels == 1
+    assert core.allocator.used_blocks == 0     # blocks freed on cancel
+    rep = report("fcfs", fin, dropped=core.dropped)
+    assert rep.deadline_cancelled == 1.0 and rep.dropped_total == 1.0
+
+
+def test_admission_denies_unmeetable_deadline():
+    """With a per-token service estimate, a request whose predicted service
+    time already overruns its deadline is cancelled before admission —
+    zero tokens are burnt on it."""
+    hopeless = Request(0, "long", 0.0, 8, 100, deadline=0.5)
+    hopeless.score, hopeless.scored = 100.0, True    # predicted 100 tokens
+    ok = Request(1, "short", 0.0, 8, 5, deadline=10.0)
+    core = make_sim_core(Scheduler(policy=fcfs(), max_batch=2), cost=_cost(),
+                         deadline_time_per_token=0.01)   # 100 tok → 1s > 0.5
+    core.submit([hopeless, ok])
+    fin = core.run()
+    assert [r.req_id for r in fin] == [1]
+    assert core.dropped[0].req_id == 0
+    assert core.dropped[0].state is RequestState.CANCELLED
+    assert core.dropped[0].tokens_done == 0
+
+
+# ------------------------------------------------------------- load shedding
+def test_sustained_overload_sheds_worst_ranked_tail():
+    reqs = _reqs(8, tlen=20)
+    core = make_sim_core(Scheduler(policy=fcfs(), max_batch=1), cost=_cost(),
+                         shed_queue_depth=2, shed_sustain_steps=2)
+    core.submit(reqs)
+    fin = core.run()
+    assert core.shed_count > 0
+    shed = [r for r in core.dropped if r.state is RequestState.SHED]
+    assert len(shed) == core.shed_count
+    assert all(r.drop_reason == "overload" for r in shed)
+    assert len(fin) + len(core.dropped) == len(reqs)
+    # fcfs sheds the worst-ranked (latest) arrivals, never the head
+    assert 0 not in {r.req_id for r in shed}
+    rep = report("fcfs", fin, dropped=core.dropped)
+    assert rep.shed == float(core.shed_count)
+
+
+def test_one_step_burst_never_sheds():
+    reqs = _reqs(8, tlen=2)
+    core = make_sim_core(Scheduler(policy=fcfs(), max_batch=8), cost=_cost(),
+                         shed_queue_depth=2, shed_sustain_steps=3)
+    core.submit(reqs)
+    fin = core.run()
+    # queue drains within the sustain window: overload was never sustained
+    assert core.shed_count == 0 and len(fin) == 8
+
+
+def test_shed_gate_refuses_long_predicted_work_under_overload():
+    reqs = _reqs(6, tlen=10)
+    for r in reqs:
+        r.score, r.scored = 5.0, True
+    long_req = Request(9, "predicted long", 0.0, 8, 10)
+    long_req.score, long_req.scored = 500.0, True
+    core = make_sim_core(Scheduler(policy=fcfs(), max_batch=1), cost=_cost(),
+                         shed_queue_depth=2, shed_sustain_steps=2,
+                         shed_predicted_tokens=100.0)
+    core.submit([*reqs, long_req])
+    core.run()
+    dropped_ids = {r.req_id for r in core.dropped}
+    assert 9 in dropped_ids                   # the long one was refused
+    assert all(r.state is RequestState.SHED for r in core.dropped)
+
+
+# ------------------------------------------------------------- grow storms
+def test_grow_storm_self_preempts_and_recovers():
+    # first grow happens once a request's decode overflows its admission
+    # reservation (prompt + one block = 32 tokens → ~step 26 at these
+    # lengths); the storm must straddle it
+    faults = FaultSchedule(grow_storms=(GrowStorm(replica=0, start_step=2,
+                                                  end_step=40),))
+    reqs = _reqs(4, plen=8, tlen=40)
+    fin = simulate(reqs, Scheduler(policy=fcfs(), max_batch=4), cost=_cost(),
+                   kv_blocks=64, kv_reservation="incremental", faults=faults)
+    assert faults.injected_grow_denials > 0
+    assert len(fin) == 4                      # the storm loses nothing
+    assert all(r.tokens_done == r.true_length for r in fin)
+    assert sum(r.grow_failures or 0 for r in fin) > 0
+
+
+# ------------------------------------------- routing-aware starvation escape
+def test_affinity_starved_request_escapes_to_other_replica():
+    """Replica 0 is pinned full by a long request; a later request routed
+    there would wait out the whole drain. With the escape bound it
+    re-routes to the idle replica 1 after K gate rejections."""
+    long_a = Request(0, "occupier a", 0.0, 16, 80)       # 6 blocks, slow
+    short_b = Request(1, "occupier b", 0.0, 16, 4)       # replica 1, quick
+    stuck = Request(2, "starved", 0.1, 16, 40)           # rr → replica 0
+    rt = simulate_replicas([long_a, short_b, stuck], n_replicas=2,
+                           policy_factory=fcfs, routing="round_robin",
+                           cost=_cost(), kv_blocks=6, block_size=16,
+                           max_batch=2, affinity_escape_after=3)
+    fin = rt.finished
+    assert len(fin) == 3
+    assert rt.redispatches >= 1               # the escape actually fired
+    assert rt.assignments[2] == 1             # ended up on the other replica
+    # escaping must beat waiting for replica 0's drain: request 2 starts
+    # before the occupier finishes
+    by_id = {r.req_id: r for r in fin}
+    assert by_id[2].start_time < by_id[0].finish_time
+
+
+def test_escape_disabled_keeps_request_on_routed_replica():
+    long_a = Request(0, "occupier a", 0.0, 16, 80)
+    short_b = Request(1, "occupier b", 0.0, 16, 4)
+    stuck = Request(2, "starved", 0.1, 16, 40)
+    rt = simulate_replicas([long_a, short_b, stuck], n_replicas=2,
+                           policy_factory=fcfs, routing="round_robin",
+                           cost=_cost(), kv_blocks=6, block_size=16,
+                           max_batch=2, affinity_escape_after=None)
+    assert len(rt.finished) == 3
+    assert rt.redispatches == 0
+    assert rt.assignments[2] == 0             # stayed put, waited out drain
+
+
+# ------------------------------------------------------- no-fault bit-identity
+def _trace(fin):
+    return [(r.req_id, r.start_time, r.first_token_time, r.finish_time)
+            for r in sorted(fin, key=lambda r: r.req_id)]
+
+
+def test_empty_fault_schedule_is_bit_identical_single_core():
+    reqs_a = _reqs(10, tlen=12, stagger=0.03)
+    reqs_b = _reqs(10, tlen=12, stagger=0.03)
+    base = simulate(reqs_a, Scheduler(policy=fcfs(), max_batch=4),
+                    cost=_cost(), kv_blocks=32)
+    hooked = simulate(reqs_b, Scheduler(policy=fcfs(), max_batch=4),
+                      cost=_cost(), kv_blocks=32, faults=FaultSchedule())
+    assert _trace(base) == _trace(hooked)
+
+
+def test_empty_fault_schedule_is_bit_identical_router():
+    def run(faults):
+        return simulate_replicas(_reqs(12, tlen=8, stagger=0.02),
+                                 n_replicas=2, policy_factory=fcfs,
+                                 routing="least_kv_pressure", seed=3,
+                                 cost=_cost(), kv_blocks=32, faults=faults)
+    a, b = run(None), run(FaultSchedule())
+    assert _trace(a.finished) == _trace(b.finished)
+    assert a.assignment_log == b.assignment_log
+
+
+def test_chaos_schedule_is_deterministic_under_fixed_seed():
+    def run():
+        faults = FaultSchedule.chaos(seed=7, n_replicas=2, horizon_steps=30,
+                                     n_crashes=1, restart_events=25,
+                                     n_scorer_outages=0, n_grow_storms=0,
+                                     arrival_skew_s=0.05)
+        rt = simulate_replicas(_reqs(16, tlen=6, stagger=0.02),
+                               n_replicas=2, policy_factory=fcfs,
+                               routing="round_robin", cost=_cost(),
+                               faults=faults)
+        return _trace(rt.finished), _trace(rt.all_dropped)
+    assert run() == run()

@@ -79,13 +79,43 @@ def test_simulator_defers_admission_under_tight_kv_budget():
     assert any(r.start_time > 0.0 for r in fin)       # admission was deferred
 
 
-def test_simulator_raises_on_never_fitting_request():
-    # message reports a consistent (request id, token demand, block math)
-    # triple: 100+100 tokens = ceil(200/16) = 13 blocks vs 2-block capacity
-    with pytest.raises(MemoryError, match=r"request 0 .* 200 tokens = 13 "
-                                          r"blocks of 16, .* 2 blocks"):
-        simulate([Request(0, "p", 0.0, 100, 100)],
-                 Scheduler(policy=fcfs(), max_batch=1), kv_blocks=2)
+def test_never_fitting_request_is_rejected_terminally():
+    """A request whose full footprint exceeds total capacity (100+100 tokens
+    = 13 blocks of 16 vs a 2-block budget) can never be admitted: the KV
+    gate rejects it terminally instead of deferring it forever (the
+    historical behaviour was a no-progress MemoryError from the step loop).
+    The run completes, the request lands in ``core.dropped`` with a
+    distinct terminal state, and the drop is a metric, not an exception."""
+    from repro.core.scheduler.request import RequestState
+    from repro.serving.metrics import report
+    from repro.serving.simulator import make_sim_core
+
+    core = make_sim_core(Scheduler(policy=fcfs(), max_batch=1), kv_blocks=2)
+    core.submit([Request(0, "p", 0.0, 100, 100)])
+    finished = core.run()
+    assert finished == []
+    assert len(core.dropped) == 1
+    r = core.dropped[0]
+    assert r.state is RequestState.REJECTED
+    assert r.drop_reason == "kv-infeasible"
+    assert r.finish_time is not None
+    assert core.infeasible_rejections == 1
+    rep = report("fcfs", finished, dropped=core.dropped)
+    assert rep.rejected == 1 and rep.dropped_total == 1
+
+
+def test_rejection_does_not_starve_feasible_requests():
+    """One infeasible request in a stream of feasible ones: everyone else
+    still finishes, and conservation holds (finished + dropped == n)."""
+    from repro.serving.simulator import make_sim_core
+
+    reqs = _reqs(4, plen=8, tlen=16)                   # 2 blocks each
+    reqs.append(Request(9, "huge", 0.0, 100, 100))     # 13 blocks > 4
+    core = make_sim_core(Scheduler(policy=fcfs(), max_batch=4), kv_blocks=4)
+    core.submit(reqs)
+    finished = core.run()
+    assert len(finished) == 4 and len(core.dropped) == 1
+    assert core.dropped[0].req_id == 9
 
 
 # ------------------------------------------------- real path: bucketed prefill

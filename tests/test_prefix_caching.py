@@ -159,16 +159,28 @@ def test_sharing_admits_within_budget_full_demand_exceeds():
     assert warm[1].cached_prefix_tokens == 48
 
 
-def test_no_progress_memory_error_reports_effective_demand():
-    """Regression for the no-progress path: the message must account for
-    cached-prefix reservations instead of assuming full-prompt demand."""
+def test_never_fitting_request_rejected_even_with_cached_prefix():
+    """Regression for the old no-progress path: a prefix-cache hit reduces
+    prefill work, not simultaneous residency — request 1's full footprint
+    (112 tokens = 7 blocks) exceeds the 5-block budget no matter how many
+    of those blocks are reusable from the cache, so the gate rejects it
+    terminally instead of deferring forever. Request 0 is untouched."""
+    from repro.core.scheduler.request import RequestState
+    from repro.serving.simulator import make_sim_core
+
     reqs = [Request(0, _words(80, "s"), 0.0, 64, 16),          # fits: 5 of 5
             Request(1, _words(80, "s"), 10.0, 64, 48)]         # 7 > 5, ever
-    with pytest.raises(MemoryError, match=r"request 1 .* 112 tokens = 7 "
-                                          r"blocks of 16 \(3 reusable from "
-                                          r"the prefix cache\), .* 5 blocks"):
-        simulate(reqs, Scheduler(policy=fcfs(), max_batch=2), cost=_cost(),
-                 kv_blocks=5, prefix_caching=True)
+    core = make_sim_core(Scheduler(policy=fcfs(), max_batch=2), cost=_cost(),
+                         kv_blocks=5, prefix_caching=True)
+    core.submit(reqs)
+    finished = core.run()
+    assert [r.req_id for r in finished] == [0]
+    assert len(core.dropped) == 1
+    r = core.dropped[0]
+    assert r.req_id == 1
+    assert r.state is RequestState.REJECTED
+    assert r.drop_reason == "kv-infeasible"
+    assert core.infeasible_rejections == 1
 
 
 # ----------------------------------------------------------- metrics report

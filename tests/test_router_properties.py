@@ -55,15 +55,26 @@ def _prompt(variant: int, rid: int) -> str:
 def _census(router: ReplicaRouter, submitted: dict) -> None:
     """The conservation law: each submitted request sits in exactly one
     container of exactly one owner, and replica containers only ever hold
-    requests assigned to that replica."""
+    requests assigned to that replica. Fault containers count too — a
+    failover retry (no assignment while in backoff), a router-level
+    ``FAILED`` drop, and per-replica terminal drops are all places a
+    request may legitimately be, but never two of them at once."""
     locations = Counter()
     for r in router._pending:
         locations[r.req_id] += 1
         # not routed yet: must not carry an assignment
         assert r.req_id not in router.assignments
+    for r in router._retry:
+        locations[r.req_id] += 1
+        # stripped on crash; re-assigned only when the retry re-routes
+        assert r.req_id not in router.assignments
+    for r in router.dropped:
+        locations[r.req_id] += 1
+        assert r.state is RequestState.FAILED
     for i, core in enumerate(router.replicas):
         for container in (core._pending, core.scheduler.waiting,
-                          core.scheduler.running, core.finished):
+                          core.scheduler.running, core.finished,
+                          core.dropped):
             for r in container:
                 locations[r.req_id] += 1
                 assert router.assignments.get(r.req_id) == i, \
@@ -71,9 +82,9 @@ def _census(router: ReplicaRouter, submitted: dict) -> None:
                     f"{router.assignments.get(r.req_id)}"
     assert locations == Counter({rid: 1 for rid in submitted}), \
         "request lost or duplicated across replicas"
-    # the dispatch log never double-routes
+    # the dispatch log re-routes exactly ``redispatches`` times
     logged = [rid for rid, _ in router.assignment_log]
-    assert len(logged) == len(set(logged))
+    assert len(logged) == len(set(logged)) + router.redispatches
 
 
 def _force_preempt(core) -> None:
@@ -146,3 +157,102 @@ def test_random_routed_lifecycle_preserves_invariants(n, pol, incremental,
         assert core.allocator.free_blocks == core.allocator.total_blocks
         for rid in submitted:
             assert core.allocator.reserved(rid) == 0
+
+
+# ------------------------------------------------------- faulty lifecycles
+class _TogglableScorer:
+    """Shared scorer whose failure mode the op stream flips on and off —
+    the policy-level degradation ladder runs *inside* the routed
+    lifecycle, not just in isolation."""
+
+    def __init__(self):
+        self.broken = False
+
+    def __call__(self, prompts):
+        if self.broken:
+            raise RuntimeError("injected outage")
+        return [float(len(p)) for p in prompts]
+
+
+@given(n=st.integers(min_value=1, max_value=3),
+       pol=st.integers(min_value=0, max_value=3),
+       incremental=st.booleans(),
+       budget=st.integers(min_value=8, max_value=20),
+       codes=st.lists(st.integers(min_value=0, max_value=1 << 20),
+                      min_size=1, max_size=120))
+def test_faulty_routed_lifecycle_preserves_invariants(n, pol, incremental,
+                                                      budget, codes):
+    """The no-fault suite's conservation laws, now under injected replica
+    crashes, cold restarts, scorer outages, and forced deadline expiry:
+    nothing is ever lost or duplicated, and at drain every request is
+    finished or terminally dropped — never silently gone."""
+    from repro.core.scheduler.policies import predictor_sjf
+
+    scorer = _TogglableScorer()
+
+    def policy_factory():
+        return predictor_sjf("pars", scorer, scorer_failure_budget=2)
+
+    cores = make_sim_replicas(
+        n, policy_factory, kv_blocks=budget, block_size=BS, max_batch=3,
+        prefill_chunk_tokens=6, prefix_caching=True,
+        kv_reservation="incremental" if incremental else "full")
+    router = ReplicaRouter(cores, policy=ROUTING_POLICIES[pol], seed=7,
+                           max_failovers=2, failover_backoff_s=0.01)
+    # crashes always restart a few events later, so a drain can never
+    # stall behind a permanently dead pool
+    router.on_replica_down = (
+        lambda rt, idx: rt.schedule_restart(idx, rt.event_count + 3))
+    submitted, next_id, t = {}, 0, 0.0
+    for code in codes:
+        op = code % 8
+        if op == 0:                                       # arrive
+            variant = (code >> 3) % 6
+            plen = 4 + (code >> 5) % 16
+            out = 1 + (code >> 9) % 4
+            req = Request(next_id, _prompt(variant, next_id), t, plen, out,
+                          deadline=t + 1e6)               # far-future SLO
+            router.submit([req])
+            submitted[next_id] = req
+            next_id += 1
+            t += 0.05
+        elif op == 1:                                     # one global event
+            router.step()
+        elif op == 2:                                     # a burst of events
+            for _ in range(4):
+                router.step()
+        elif op == 3:                                     # forced preemption
+            core = cores[(code >> 3) % n]
+            if not core._crashed:
+                _force_preempt(core)
+        elif op == 4:                                     # kill a replica
+            core = cores[(code >> 3) % n]
+            if not core._crashed:
+                core.inject_crash()        # discovered at the next probe
+        elif op == 5:                                     # early cold restart
+            idx = (code >> 3) % n
+            if not router.healthy[idx]:
+                router.restart_replica(idx)
+        elif op == 6:                                     # deadline expiry
+            core = cores[(code >> 3) % n]
+            live = [*core.scheduler.waiting, *core.scheduler.running]
+            if live and not core._crashed:
+                live[(code >> 5) % len(live)].deadline = -1.0
+        elif op == 7:                                     # scorer outage flip
+            scorer.broken = not scorer.broken
+        _census(router, submitted)
+        for core in cores:
+            _check_invariants(core.allocator)
+    scorer.broken = False                                 # let ranking heal
+    router.run()                                          # drain everything
+    fin, dropped = router.finished, router.all_dropped
+    assert sorted(r.req_id for r in [*fin, *dropped]) == sorted(submitted)
+    for r in fin:
+        assert r.tokens_done == r.true_length             # finished = complete
+    for r in dropped:
+        assert r.state in (RequestState.CANCELLED, RequestState.FAILED,
+                           RequestState.SHED, RequestState.REJECTED)
+        assert r.drop_reason is not None and r.finish_time is not None
+    for core in cores:
+        _check_invariants(core.allocator)
+        assert core.allocator.used_blocks == 0
