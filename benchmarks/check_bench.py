@@ -1,0 +1,79 @@
+"""CI gate: the consolidated ``BENCH_serving.json`` must be schema-valid.
+
+Every serving benchmark merges its section into the repo-root
+``BENCH_serving.json`` (see :func:`benchmarks.common.record_serving_bench`).
+This checker asserts the consolidated file still carries **all** expected
+sections with their load-bearing keys — so a refactor that silently stops
+recording a benchmark (or a scenario-filtered run that clobbers the full
+harness section) fails CI instead of shipping a hollowed-out artifact.
+
+    PYTHONPATH=src python -m benchmarks.check_bench
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.common import BENCH_SERVING_JSON
+
+#: section name -> keys that must be present (and non-null unless noted)
+REQUIRED_SECTIONS = {
+    "chunked_prefill": ("p99_itl_speedup", "chunked_p99_itl_s",
+                        "unchunked_p99_itl_s"),
+    "prefix_caching": ("hit_rate", "warm_ttft_speedup",
+                       "prefill_tokens_saved"),
+    "paged_decode": ("concurrency_ratio", "real_identical_outputs"),
+    "router": ("affinity", "skew"),
+    "iterative_rank": ("mean_speedup_vs_static", "p99_speedup_vs_static",
+                       "heavy_noise_vs_fcfs"),
+    "fault_tolerance": ("crash_failover", "predictor_degradation",
+                        "deadline_shed", "no_fault_parity"),
+    "workload_harness": ("multitenant", "overload_shed", "starvation",
+                         "rate_sweep", "routed"),
+}
+
+#: inside workload_harness.multitenant: the SLO headline keys the README
+#: and CI summary quote
+MULTITENANT_KEYS = ("policies", "contended_class", "contended_attainment",
+                    "contended_goodput_gain")
+
+
+def check(path=BENCH_SERVING_JSON) -> list:
+    errors = []
+    if not path.exists():
+        return [f"{path} missing — run the serving benchmarks first"]
+    try:
+        data = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return [f"{path} is not valid JSON: {e}"]
+    for section, keys in REQUIRED_SECTIONS.items():
+        if section not in data:
+            errors.append(f"section missing: {section}")
+            continue
+        for key in keys:
+            if key not in data[section]:
+                errors.append(f"{section}.{key} missing")
+            elif data[section][key] is None:
+                errors.append(f"{section}.{key} is null")
+    mt = data.get("workload_harness", {}).get("multitenant", {})
+    for key in MULTITENANT_KEYS:
+        if mt and key not in mt:
+            errors.append(f"workload_harness.multitenant.{key} missing")
+    return errors
+
+
+def main() -> None:
+    errors = check()
+    if errors:
+        print(f"BENCH_serving.json schema check FAILED "
+              f"({len(errors)} error(s)):")
+        for e in errors:
+            print(f"  - {e}")
+        sys.exit(1)
+    data = json.loads(BENCH_SERVING_JSON.read_text())
+    print(f"BENCH_serving.json OK: {len(data)} sections "
+          f"({', '.join(sorted(data))})")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ from benchmarks.common import emit, record_serving_bench
 from repro.core.scheduler.policies import fcfs
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.config import ServingConfig
 from repro.serving.metrics import itl_samples
 from repro.serving.simulator import CostModel, simulate
 
@@ -76,8 +77,9 @@ def run_sim(*, n_bg: int = 8, bg_len: int = 80, n_burst: int = 4,
     out = {"chunk_tokens": chunk}
     for label, c in (("unchunked", None), ("chunked", chunk)):
         fin = simulate(reqs(), Scheduler(policy=fcfs(), max_batch=32),
-                       cost=CostModel(), prefill_chunk_tokens=c,
-                       record_token_times=True)
+                       cost=CostModel(),
+                       config=ServingConfig(prefill_chunk_tokens=c,
+                                            record_token_times=True))
         assert len(fin) == n_bg + n_burst
         out[label] = _stats(fin)
         _row(label, out[label])
@@ -115,8 +117,9 @@ def run_real(*, arch: str = "llama3_2_3b", n_bg: int = 3, bg_len: int = 60,
         eng = Engine(cfg, params,
                      Scheduler(policy=fcfs(), max_batch=n_bg + n_burst),
                      cache_len=2 * prompt_len + 2 * bg_len,
-                     prompt_len=prompt_len, prefill_chunk_tokens=c,
-                     record_tokens=True, record_token_times=True)
+                     prompt_len=prompt_len, record_tokens=True,
+                     config=ServingConfig(prefill_chunk_tokens=c,
+                                          record_token_times=True))
         eng.warmup()
         return eng
 

@@ -1,4 +1,5 @@
-"""Shared benchmark infrastructure: sized settings + in-process caches.
+"""Shared benchmark infrastructure: sized settings, in-process caches, and
+the serving-benchmark runner.
 
 Every table benchmark goes through ``get_predictor`` so a predictor trained
 for Table II is reused by Tables III/IV/scheduling/cross-model without
@@ -6,15 +7,25 @@ retraining (single-core container budget).
 
 FAST mode (default) uses reduced corpus/epoch sizes; ``--full`` restores the
 paper-scale protocol (5 epochs etc.). Sizes are recorded in every output row.
+
+Serving benchmarks declare a :class:`ServingBench` and delegate their
+``main`` to :func:`bench_main`, which owns the boilerplate every script used
+to hand-roll: ``--smoke`` / ``--json`` / ``--seed`` arg parsing, the
+``name,us_per_call,derived`` CSV row, the ``BENCH_serving.json`` section
+merge, and the optional JSON artifact. ``benchmarks/run.py`` enumerates the
+same registry, so adding a benchmark is one ``ServingBench`` declaration —
+not another copy of the arg parser.
 """
 from __future__ import annotations
 
+import argparse
 import functools
 import json
 import os
 import time
 from dataclasses import dataclass
 from pathlib import Path
+from typing import Callable, Optional, Tuple
 
 import numpy as np
 
@@ -99,3 +110,60 @@ def record_serving_bench(section: str, payload: dict,
         data = json.loads(path.read_text())
     data[section] = payload
     path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+
+
+# --------------------------------------------------------- serving-bench runner
+@dataclass(frozen=True)
+class ServingBench:
+    """One serving benchmark, declaratively.
+
+    ``run(args)`` does the actual work (acceptance assertions included) and
+    returns the full results dict; ``section(results)`` reduces it to the
+    ``BENCH_serving.json`` payload; ``headline(results)`` yields the
+    ``(us_per_call, derived)`` pair(s) for the repo-wide CSV row convention;
+    ``add_args`` hooks extra benchmark-specific flags onto the shared
+    parser. Everything else — ``--smoke`` / ``--json`` / ``--seed``, the
+    section merge, the artifact write — is :func:`bench_main`'s job.
+    """
+    name: str
+    run: Callable[[argparse.Namespace], dict]
+    section: Callable[[dict], dict]
+    headline: Optional[Callable[[dict], Tuple]] = None
+    add_args: Optional[Callable[[argparse.ArgumentParser], None]] = None
+    smoke_help: str = "tiny CI config: prove the acceptance bars hold"
+
+
+def bench_main(bench: ServingBench, argv=None) -> dict:
+    """The one arg-parse/emit/record path every serving benchmark shares."""
+    ap = argparse.ArgumentParser(prog=f"benchmarks.{bench.name}")
+    ap.add_argument("--smoke", action="store_true", help=bench.smoke_help)
+    ap.add_argument("--json", default=None,
+                    help="write full results to this path")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace seed (determinism knob)")
+    if bench.add_args is not None:
+        bench.add_args(ap)
+    args = ap.parse_args(argv)
+
+    results = bench.run(args)
+
+    if bench.headline is not None:
+        rows = bench.headline(results)
+        # one (name, us, derived) row or a list of them
+        if rows and not isinstance(rows[0], (tuple, list)):
+            rows = [rows]
+        for row in rows:
+            emit(*row)
+    record_serving_bench(bench.name, bench.section(results))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return results
+
+
+#: Registry for ``benchmarks/run.py``: import path → ServingBench attribute.
+#: Every module here exposes ``BENCH`` and a ``main(argv)`` delegating to
+#: :func:`bench_main`, so the driver can execute them uniformly.
+SERVING_BENCHES = ("router", "iterative_rank", "fault_tolerance",
+                   "workload_harness")

@@ -28,19 +28,17 @@ clock, no predictor training):
 """
 from __future__ import annotations
 
-import argparse
-import json
-
 import numpy as np
 
-from benchmarks.common import emit, record_serving_bench
+from benchmarks.common import ServingBench, bench_main
 from repro.core.scheduler.policies import fcfs, predictor_sjf
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.config import ServingConfig
 from repro.serving.faults import FaultSchedule, ReplicaCrash, ScorerOutage
-from repro.serving.simulator import (make_sim_core, make_sim_replicas,
-                                     simulate_replicas)
-from repro.serving.metrics import report
+from repro.serving.simulator import (clone_requests, make_sim_core,
+                                     make_sim_replicas, simulate_replicas)
+from repro.serving.metrics import RunCounters, report
 from repro.serving.router import ReplicaRouter
 
 # Faulty p99 TTFT may cost at most this factor over fault-free. Full-scale
@@ -64,11 +62,9 @@ def poisson_trace(n: int, *, rate_hz: float = 6.0, prompt_words: int = 12,
             for i in range(n)]
 
 
-def _clone(reqs):
-    """Fresh Request objects so one run's mutations never leak into the
-    next (deadlines carry over — they are workload, not run state)."""
-    return [Request(r.req_id, r.prompt, r.arrival_time, r.prompt_len,
-                    r.true_length, deadline=r.deadline) for r in reqs]
+# fresh Request objects so one run's mutations never leak into the next
+# (deadlines carry over — they are workload, not run state)
+_clone = clone_requests
 
 
 def _table_scorer(reqs):
@@ -148,9 +144,10 @@ def run_predictor_degradation(*, n: int = 600) -> dict:
     assert pol.degradations >= 1, "failure budget never degraded the policy"
     assert pol.recoveries >= 1, "the policy never recovered from FCFS"
     assert not pol.degraded, "run ended still degraded"
-    rep = report("pars", finished, dropped=core.dropped,
-                 scorer_failures=pol.scorer_failures,
-                 degradations=pol.degradations, recoveries=pol.recoveries)
+    rep = report("pars", finished, counters=RunCounters(
+        dropped=tuple(core.dropped),
+        scorer_failures=pol.scorer_failures,
+        degradations=pol.degradations, recoveries=pol.recoveries))
     out = {
         "n_requests": n,
         "scorer_failures": rep.scorer_failures,
@@ -174,13 +171,14 @@ def run_deadline_shed(*, n: int = 400) -> dict:
         r.deadline = r.arrival_time + (3.0 if r.true_length <= 8 else 1e6)
     core = make_sim_core(Scheduler(policy=fcfs(), max_batch=2),
                          kv_blocks=96, block_size=16,
-                         deadline_time_per_token=0.03,
-                         shed_queue_depth=max(n // 4, 8),
-                         shed_sustain_steps=3)
+                         config=ServingConfig(
+                             deadline_time_per_token=0.03,
+                             shed_queue_depth=max(n // 4, 8),
+                             shed_sustain_steps=3))
     core.submit(_clone(trace))
     finished = core.run()
     assert len(finished) + len(core.dropped) == n
-    rep = report("fcfs", finished, dropped=core.dropped)
+    rep = report("fcfs", finished, counters=RunCounters.from_core(core))
     assert rep.dropped_total >= 1, "overload burst produced no drops"
     assert rep.shed >= 1, "sustained overload never shed the tail"
     out = {
@@ -229,15 +227,9 @@ def run_no_fault_parity(*, n: int = 300, n_replicas: int = 2) -> dict:
     return {"n_requests": n, "identical": True}
 
 
-def main(argv=None) -> dict:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny CI config: prove every acceptance bar holds")
-    ap.add_argument("--json", default=None, help="write results to this path")
-    args = ap.parse_args(argv)
-
+def _run(args) -> dict:
     print("chaos benchmark" + (" (smoke)" if args.smoke else "") + ":")
-    results = {
+    return {
         "crash_failover": run_crash_failover(n=150 if args.smoke else 1200),
         "predictor_degradation":
             run_predictor_degradation(n=120 if args.smoke else 600),
@@ -246,21 +238,32 @@ def main(argv=None) -> dict:
             run_no_fault_parity(n=60 if args.smoke else 300),
     }
 
+
+def _headline(results) -> list:
     cf = results["crash_failover"]
-    emit("fault_crash_failover", cf["faulty_p99_ttft_s"] * 1e6,
-         f"p99 TTFT {cf['p99_ttft_inflation']:.2f}x fault-free under "
-         f"{cf['injected_crashes']} crashes; conservation held")
     dg = results["predictor_degradation"]
-    emit("fault_predictor_degradation", dg["p99_ttft_s"] * 1e6,
+    return [
+        ("fault_crash_failover", cf["faulty_p99_ttft_s"] * 1e6,
+         f"p99 TTFT {cf['p99_ttft_inflation']:.2f}x fault-free under "
+         f"{cf['injected_crashes']} crashes; conservation held"),
+        ("fault_predictor_degradation", dg["p99_ttft_s"] * 1e6,
          f"{int(dg['degradations'])} degradation(s) + "
          f"{int(dg['recoveries'])} recovery(ies) across "
-         f"{int(dg['scorer_failures'])} scorer failures")
-    record_serving_bench("fault_tolerance", results)
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(results, f, indent=2, sort_keys=True)
-        print(f"wrote {args.json}")
-    return results
+         f"{int(dg['scorer_failures'])} scorer failures"),
+    ]
+
+
+BENCH = ServingBench(
+    name="fault_tolerance",
+    run=_run,
+    section=lambda results: results,
+    headline=_headline,
+    smoke_help="tiny CI config: prove every acceptance bar holds",
+)
+
+
+def main(argv=None) -> dict:
+    return bench_main(BENCH, argv)
 
 
 if __name__ == "__main__":

@@ -36,16 +36,14 @@ is virtual.
 """
 from __future__ import annotations
 
-import argparse
-import json
-
 import numpy as np
 
-from benchmarks.common import emit, record_serving_bench
+from benchmarks.common import ServingBench, bench_main
 from repro.core.scheduler.policies import fcfs, predictor_sjf
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
-from repro.serving.metrics import report
+from repro.serving.config import ServingConfig
+from repro.serving.metrics import RunCounters, report
 from repro.serving.simulator import CostModel, simulate
 
 # recompute-heavy regime: preemption is cheap to trigger and expensive to
@@ -121,14 +119,14 @@ def run_method(reqs, method: str) -> dict:
     sched = Scheduler(policy=policy, max_batch=MAX_BATCH, preemption=True,
                       max_preemptions=MAX_PREEMPTIONS,
                       starvation_threshold=float("inf"))
-    rerank_kw = ({"rerank_every_steps": RERANK_EVERY_STEPS,
-                  "rerank_pin_after": PIN_AFTER}
-                 if method == "iterative" else {})
-    fin = simulate(reqs, sched, cost=COST, **rerank_kw)
+    cfg = (ServingConfig(rerank_every_steps=RERANK_EVERY_STEPS,
+                         rerank_pin_after=PIN_AFTER)
+           if method == "iterative" else ServingConfig())
+    fin = simulate(reqs, sched, cost=COST, config=cfg)
     assert len(fin) == len(reqs), (method, len(fin), len(reqs))
     e2e = np.array([r.finish_time - r.arrival_time for r in fin])
-    rep = report(method, fin,
-                 reranks=sched.rerank_count if rerank_kw else None)
+    rep = report(method, fin, counters=RunCounters(
+        reranks=sched.rerank_count if cfg.rerank_enabled else None))
     return {
         "mean_latency_s": float(e2e.mean()),
         "p99_latency_s": float(np.percentile(e2e, 99)),
@@ -137,10 +135,10 @@ def run_method(reqs, method: str) -> dict:
         "makespan_s": rep.makespan,
         "preemptions": int(sum(r.preempt_count for r in fin)),
         "pinned": int(sum(1 for r in fin if r.boosted)),
-        "reranks": None if not rerank_kw else sched.rerank_count,
-        "rerank_preemptions": (None if not rerank_kw else
-                               int(sum(r.rerank_preemptions or 0
-                                       for r in fin))),
+        "reranks": sched.rerank_count if cfg.rerank_enabled else None,
+        "rerank_preemptions": (int(sum(r.rerank_preemptions or 0
+                                       for r in fin))
+                               if cfg.rerank_enabled else None),
     }
 
 
@@ -184,34 +182,31 @@ def run_sweep(n: int, sigmas=NOISE_SIGMAS) -> dict:
     return out
 
 
-def main(argv=None) -> dict:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny CI config: prove the sweep runs and all "
-                         "three acceptance bars hold")
-    ap.add_argument("--json", default=None, help="write results to this path")
-    ap.add_argument("--requests", type=int, default=None,
-                    help="override trace length")
-    args = ap.parse_args(argv)
+BENCH = ServingBench(
+    name="iterative_rank",
+    run=lambda args: run_sweep(args.requests
+                               or (220 if args.smoke else 1500)),
+    section=lambda r: {
+        "mean_speedup_vs_static": r["mean_speedup_vs_static"],
+        "p99_speedup_vs_static": r["p99_speedup_vs_static"],
+        "heavy_noise_vs_fcfs": r["heavy_noise_vs_fcfs"],
+        "by_sigma": r["by_sigma"],
+    },
+    headline=lambda r: (
+        "iterative_rank",
+        r["by_sigma"]["0"]["iterative"]["mean_latency_s"] * 1e6,
+        f"mean {r['mean_speedup_vs_static']:.2f}x / p99 "
+        f"{r['p99_speedup_vs_static']:.2f}x vs static; "
+        f"{r['heavy_noise_vs_fcfs']:.2f}x FCFS at heaviest noise"),
+    add_args=lambda ap: ap.add_argument(
+        "--requests", type=int, default=None, help="override trace length"),
+    smoke_help="tiny CI config: prove the sweep runs and all three "
+               "acceptance bars hold",
+)
 
-    n = args.requests or (220 if args.smoke else 1500)
-    results = run_sweep(n)
-    emit("iterative_rank",
-         results["by_sigma"]["0"]["iterative"]["mean_latency_s"] * 1e6,
-         f"mean {results['mean_speedup_vs_static']:.2f}x / p99 "
-         f"{results['p99_speedup_vs_static']:.2f}x vs static; "
-         f"{results['heavy_noise_vs_fcfs']:.2f}x FCFS at heaviest noise")
-    record_serving_bench("iterative_rank", {
-        "mean_speedup_vs_static": results["mean_speedup_vs_static"],
-        "p99_speedup_vs_static": results["p99_speedup_vs_static"],
-        "heavy_noise_vs_fcfs": results["heavy_noise_vs_fcfs"],
-        "by_sigma": results["by_sigma"],
-    })
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(results, f, indent=2, sort_keys=True)
-        print(f"wrote {args.json}")
-    return results
+
+def main(argv=None) -> dict:
+    return bench_main(BENCH, argv)
 
 
 if __name__ == "__main__":

@@ -38,6 +38,7 @@ from benchmarks.common import emit, record_serving_bench
 from repro.core.scheduler.policies import fcfs
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.config import ServingConfig
 from repro.serving.metrics import report
 from repro.serving.simulator import CostModel, simulate
 
@@ -62,8 +63,8 @@ def run_sim(*, n: int = 12, prompt_len: int = 16, out_len: int = 48,
 
         fin = simulate(reqs(), Scheduler(policy=fcfs(), max_batch=n),
                        cost=CostModel(), kv_blocks=blocks,
-                       block_size=block_size, kv_reservation=reservation,
-                       on_step=probe)
+                       block_size=block_size, on_step=probe,
+                       config=ServingConfig(kv_reservation=reservation))
         assert len(fin) == n, "requests lost — scheduler deadlocked?"
         assert all(r.tokens_done == r.true_length for r in fin)
         return fin, peak["running"]
@@ -132,7 +133,8 @@ def run_real(*, arch: str = "llama3_2_3b", shared_words: int = 24,
         eng = Engine(cfg, params,
                      Scheduler(policy=fcfs(), max_batch=n_warm + 1),
                      cache_len=2 * prompt_len, prompt_len=prompt_len,
-                     prefix_caching=True, paged=paged, record_tokens=True)
+                     paged=paged, record_tokens=True,
+                     config=ServingConfig(prefix_caching=True))
         eng.submit([Request(0, prefix + " donor tail", 0.0, prompt_len,
                             out_len)])
         eng.run()
@@ -167,7 +169,8 @@ def run_real(*, arch: str = "llama3_2_3b", shared_words: int = 24,
                     16, tight_out) for i in range(n_tight)]
     eng = Engine(cfg, params, Scheduler(policy=fcfs(), max_batch=n_tight),
                  cache_len=48, prompt_len=16, allocator=BlockAllocator(6, 16),
-                 kv_reservation="incremental", record_tokens=True)
+                 record_tokens=True,
+                 config=ServingConfig(kv_reservation="incremental"))
     eng.submit(reqs)
     fin = eng.run()
     assert len(fin) == n_tight

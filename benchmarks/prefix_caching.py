@@ -32,6 +32,7 @@ from benchmarks.common import emit, record_serving_bench
 from repro.core.scheduler.policies import fcfs
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.config import ServingConfig
 from repro.serving.metrics import report
 from repro.serving.simulator import CostModel, simulate
 
@@ -80,7 +81,8 @@ def run_sim(*, n: int = 32, shared_words: int = 1024, unique_words: int = 63,
     out = {"shared_prompt_tokens": shared_words}
     for label, caching in (("uncached", False), ("cached", True)):
         fin = simulate(reqs(), Scheduler(policy=fcfs(), max_batch=8),
-                       cost=CostModel(), prefix_caching=caching)
+                       cost=CostModel(),
+                       config=ServingConfig(prefix_caching=caching))
         assert len(fin) == n
         out[label] = _stats(fin)
         _row(label, out[label])
@@ -117,7 +119,8 @@ def run_real(*, arch: str = "llama3_2_3b", n_warm: int = 6,
         eng = Engine(cfg, params,
                      Scheduler(policy=fcfs(), max_batch=n_warm + 1),
                      cache_len=2 * prompt_len, prompt_len=prompt_len,
-                     prefix_caching=caching, record_tokens=True)
+                     record_tokens=True,
+                     config=ServingConfig(prefix_caching=caching))
         eng.warmup()
         eng.submit([Request(0, prefix + " donor tail words", 0.0, wc,
                             out_len)])

@@ -30,14 +30,12 @@ minutes), ``--smoke`` shrinks both for CI.
 """
 from __future__ import annotations
 
-import argparse
-import json
-
 import numpy as np
 
-from benchmarks.common import emit, record_serving_bench
+from benchmarks.common import ServingBench, bench_main
 from repro.core.scheduler.policies import fcfs
 from repro.core.scheduler.request import Request
+from repro.serving.config import ServingConfig
 from repro.serving.router import ROUTING_POLICIES
 from repro.serving.simulator import simulate_replicas
 
@@ -119,7 +117,7 @@ def run_affinity(*, n: int = 4000, n_replicas: int = 4) -> dict:
     out = _sweep(lambda: affinity_trace(n), n_replicas=n_replicas,
                  label="affinity trace", warm_hits=True,
                  kv_blocks=24, block_size=16, max_batch=4,
-                 prefix_caching=True)
+                 config=ServingConfig(prefix_caching=True))
     ratio = (out["prefix_affinity"]["warm_hit_rate"]
              / max(out["round_robin"]["warm_hit_rate"], 1e-9))
     out["warm_hit_rate_gain"] = ratio
@@ -150,51 +148,62 @@ def run_skew(*, n: int = 3000, n_replicas: int = 3) -> dict:
     return out
 
 
-def main(argv=None) -> dict:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny CI config: prove the sweep runs and both "
-                         "acceptance bars hold")
-    ap.add_argument("--json", default=None, help="write results to this path")
+def _run(args) -> dict:
+    results = {}
+    if args.mode in ("affinity", "both"):
+        results["affinity"] = run_affinity(
+            n=args.requests or (240 if args.smoke else 4000))
+    if args.mode in ("skew", "both"):
+        results["skew"] = run_skew(
+            n=args.requests or (240 if args.smoke else 3000))
+    return results
+
+
+def _headline(results) -> list:
+    rows = []
+    if "affinity" in results:
+        a = results["affinity"]
+        rows.append(("router_affinity",
+                     a["prefix_affinity"]["ttft_mean_s"] * 1e6,
+                     f"warm hit rate {a['warm_hit_rate_gain']:.1f}x "
+                     f"round_robin "
+                     f"({a['prefix_affinity']['warm_hit_rate']:.2f} vs "
+                     f"{a['round_robin']['warm_hit_rate']:.2f})"))
+    if "skew" in results:
+        s = results["skew"]
+        rows.append(("router_skew",
+                     s["predicted_shortest_queue"]["ttft_mean_s"] * 1e6,
+                     f"PSQ mean TTFT {s['psq_ttft_speedup']:.2f}x lower "
+                     f"than round_robin"))
+    return rows
+
+
+def _add_args(ap) -> None:
     ap.add_argument("--requests", type=int, default=None,
                     help="override trace length for both regimes")
     ap.add_argument("--mode", choices=("affinity", "skew", "both"),
                     default="both")
-    args = ap.parse_args(argv)
 
-    results = {}
-    if args.mode in ("affinity", "both"):
-        n = args.requests or (240 if args.smoke else 4000)
-        results["affinity"] = run_affinity(n=n)
-    if args.mode in ("skew", "both"):
-        n = args.requests or (240 if args.smoke else 3000)
-        results["skew"] = run_skew(n=n)
 
-    if "affinity" in results:
-        a = results["affinity"]
-        emit("router_affinity",
-             a["prefix_affinity"]["ttft_mean_s"] * 1e6,
-             f"warm hit rate {a['warm_hit_rate_gain']:.1f}x round_robin "
-             f"({a['prefix_affinity']['warm_hit_rate']:.2f} vs "
-             f"{a['round_robin']['warm_hit_rate']:.2f})")
-    if "skew" in results:
-        s = results["skew"]
-        emit("router_skew",
-             s["predicted_shortest_queue"]["ttft_mean_s"] * 1e6,
-             f"PSQ mean TTFT {s['psq_ttft_speedup']:.2f}x lower than "
-             f"round_robin")
-    record_serving_bench("router", {
+BENCH = ServingBench(
+    name="router",
+    run=_run,
+    section=lambda results: {
         k: {
             "warm_hit_rate_gain": v.get("warm_hit_rate_gain"),
             "psq_ttft_speedup": v.get("psq_ttft_speedup"),
             "policies": {p: v[p] for p in ROUTING_POLICIES if p in v},
         } for k, v in results.items()
-    })
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(results, f, indent=2, sort_keys=True)
-        print(f"wrote {args.json}")
-    return results
+    },
+    headline=_headline,
+    add_args=_add_args,
+    smoke_help="tiny CI config: prove the sweep runs and both acceptance "
+               "bars hold",
+)
+
+
+def main(argv=None) -> dict:
+    return bench_main(BENCH, argv)
 
 
 if __name__ == "__main__":

@@ -5,44 +5,66 @@
     PYTHONPATH=src python -m benchmarks.run --only table2 scheduling
 
 Each benchmark prints its table and a ``name,us_per_call,derived`` CSV row.
+
+Serving benchmarks (``SERVING_BENCHES`` in :mod:`benchmarks.common`) are
+enumerated uniformly: each exposes a ``main(argv)`` built on
+:func:`benchmarks.common.bench_main`, so the driver invokes them the same
+way the CLI does. The old standalone ``scheduling``/``starvation`` entries
+are now scenarios of the workload harness and remap accordingly.
 """
 from __future__ import annotations
 
 import argparse
+import functools
+import importlib
 import sys
 import time
 import traceback
 
+from benchmarks.common import SERVING_BENCHES
+
 BENCHES = ("table1", "table2", "table3", "table4", "scheduling",
            "cross_model", "pars_plus", "starvation", "kernels", "roofline",
-           "prefill_admission")
+           "prefill_admission") + SERVING_BENCHES
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help=f"subset of {BENCHES}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="pass --smoke through to the serving benchmarks")
     args = ap.parse_args()
     selected = args.only or BENCHES
 
     from benchmarks import (cross_model, kernel_bench, pars_plus_ablation,
-                            prefill_admission, roofline, scheduling_latency,
-                            starvation_sweep, table1_variability,
+                            prefill_admission, roofline, table1_variability,
                             table2_rank_methods, table3_backbones,
-                            table4_filtering)
+                            table4_filtering, workload_harness)
+    serving_argv = ["--smoke"] if args.smoke else []
     runners = {
         "table1": table1_variability.run,
         "table2": table2_rank_methods.run,
         "table3": table3_backbones.run,
         "table4": table4_filtering.run,
-        "scheduling": scheduling_latency.run,
+        # folded into the workload harness (ISSUE 10): same paper sections,
+        # now driven by the declarative trace generator
+        "scheduling": functools.partial(
+            workload_harness.main, [*serving_argv, "--scenario",
+                                    "rate_sweep"]),
         "cross_model": cross_model.run,
         "pars_plus": pars_plus_ablation.run,
-        "starvation": starvation_sweep.run,
+        "starvation": functools.partial(
+            workload_harness.main, [*serving_argv, "--scenario",
+                                    "starvation"]),
         "kernels": kernel_bench.run,
         "roofline": roofline.run,
         "prefill_admission": prefill_admission.run,
     }
+    for bench_name in SERVING_BENCHES:
+        mod = importlib.import_module(f"benchmarks.{bench_name}")
+        runners[bench_name] = functools.partial(mod.main, list(serving_argv))
+
     t0 = time.perf_counter()
     failures = []
     for name in selected:

@@ -75,6 +75,19 @@ class Request:
     # ``None`` means the serving core ran with caching disabled — metrics
     # report NaN rather than a misleading 0% hit rate; 0 is a true miss.
     cached_prefix_tokens: Optional[int] = None
+    # Multi-tenant SLO workloads (repro.serving.workloads): the tenant the
+    # request belongs to, its priority-class name, a numeric priority
+    # (higher = more important — overload shedding takes low-priority
+    # victims first and exempts priority > 0 from the predicted-length
+    # admission gate), and the class's latency SLO targets: TTFT
+    # (arrival → first token) and mean inter-token gap, in seconds. All
+    # optional — a request without them schedules exactly as before
+    # (priority 0, no SLO) and SLO metrics report NaN.
+    tenant: Optional[str] = None
+    priority_class: Optional[str] = None
+    priority: int = 0
+    slo_ttft_s: Optional[float] = None
+    slo_itl_s: Optional[float] = None
     boosted: bool = False                     # starvation-prevention flag
     preempt_count: int = 0                    # recompute-preemption evictions
     defer_count: int = 0                      # engine back-pressure deferrals

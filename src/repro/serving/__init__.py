@@ -1,5 +1,7 @@
 """Serving runtime: unified ServingCore loop, real JAX backend, discrete-event
-simulator backend, KV accounting, multi-replica router front-end."""
+simulator backend, KV accounting, multi-replica router front-end, declarative
+multi-tenant SLO workloads."""
+from repro.serving.config import ServingConfig, resolve_config
 from repro.serving.core import (PrefillChunk, ServingCore, VirtualClock,
                                 WallClock)
 from repro.serving.engine import Engine, RealBackend, serve
@@ -7,11 +9,18 @@ from repro.serving.faults import (ArrivalSkew, FaultSchedule, GrowStorm,
                                   ReplicaCrash, ReplicaCrashed, ScorerError,
                                   ScorerOutage, ScorerTimeout)
 from repro.serving.kv_cache import BlockAllocator, prefix_chunk_hashes
-from repro.serving.metrics import (LatencyReport, RouterReport, itl_samples,
-                                   report, router_report)
+from repro.serving.metrics import (ClassSLOStats, LatencyReport, RouterReport,
+                                   RunCounters, SLOReport, TenantStats,
+                                   itl_samples, meets_itl, meets_slo,
+                                   meets_ttft, report, router_report,
+                                   slo_report)
 from repro.serving.router import (ROUTING_POLICIES, ReplicaRouter,
                                   score_predicted_len)
 from repro.serving.sampler import SamplerConfig, sample
-from repro.serving.simulator import (CostModel, SimBackend, make_sim_core,
-                                     make_sim_replicas, run_policy, simulate,
-                                     simulate_replicas)
+from repro.serving.simulator import (CostModel, SimBackend, clone_requests,
+                                     make_sim_core, make_sim_replicas,
+                                     run_policy, simulate, simulate_replicas)
+from repro.serving.workloads import (SLO, ArrivalPhase, ConversationSpec,
+                                     OutputDist, PriorityClass, TenantSpec,
+                                     WorkloadSpec, generate_trace,
+                                     trace_summary)

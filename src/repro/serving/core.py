@@ -85,12 +85,14 @@ loop itself.
 from __future__ import annotations
 
 import time
+import warnings
 from collections import deque
 from typing import (Callable, Deque, Dict, List, Optional, Protocol, Sequence,
                     Tuple)
 
 from repro.core.scheduler.request import Request, RequestState
 from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.config import ServingConfig
 from repro.serving.faults import ReplicaCrashed
 from repro.serving.kv_cache import (UNBOUNDED_BLOCKS, BlockAllocator,
                                     prefix_chunk_hashes)
@@ -185,6 +187,16 @@ class ExecutionBackend(Protocol):
 class ServingCore:
     """The single KV-aware step loop behind the engine and the simulator.
 
+    Behavioural knobs are consolidated in one frozen
+    :class:`~repro.serving.config.ServingConfig` — the primary constructor
+    is ``ServingCore(scheduler, backend, config=ServingConfig(...))``, with
+    the scheduler/backend/allocator/clock *objects* passed alongside as
+    wiring. The historical loose-kwargs form still works through a
+    deprecation shim (it builds the same config via
+    ``ServingConfig.from_kwargs``, so both paths are bit-identical), but
+    new code and every in-repo helper construct configs. The knobs, briefly
+    (full field docs on :class:`ServingConfig`):
+
     ``prefill_chunk_tokens`` — per-step prompt-token budget for mixed
     prefill/decode steps (``None`` = prefill each admitted request to
     completion in its admission step, the pre-chunking behaviour).
@@ -227,55 +239,49 @@ class ServingCore:
     """
 
     def __init__(self, scheduler: Scheduler, backend: ExecutionBackend, *,
+                 config: Optional[ServingConfig] = None,
                  allocator: Optional[BlockAllocator] = None,
                  clock: Optional[Clock] = None,
-                 prefill_chunk_tokens: Optional[int] = None,
-                 record_token_times: bool = False,
-                 prefix_caching: bool = False,
-                 kv_reservation: str = "full",
-                 rerank_interval: Optional[float] = None,
-                 rerank_every_steps: Optional[int] = None,
-                 rerank_floor: float = 0.0,
-                 rerank_pin_after: int = 3,
-                 deadline_time_per_token: Optional[float] = None,
-                 shed_queue_depth: Optional[int] = None,
-                 shed_kv_pressure: Optional[float] = None,
-                 shed_sustain_steps: int = 3,
-                 shed_predicted_tokens: Optional[float] = None) -> None:
-        if prefill_chunk_tokens is not None and prefill_chunk_tokens <= 0:
-            raise ValueError("prefill_chunk_tokens must be positive or None")
-        if kv_reservation not in ("full", "incremental"):
-            raise ValueError(f"kv_reservation must be 'full' or "
-                             f"'incremental', got {kv_reservation!r}")
-        if rerank_interval is not None and rerank_interval <= 0:
-            raise ValueError("rerank_interval must be positive or None")
-        if rerank_every_steps is not None and rerank_every_steps <= 0:
-            raise ValueError("rerank_every_steps must be positive or None")
-        if shed_sustain_steps < 1:
-            raise ValueError("shed_sustain_steps must be >= 1")
+                 **legacy_kwargs) -> None:
+        if legacy_kwargs:
+            # Deprecation shim: the historical loose-kwargs constructor.
+            # Translated through ServingConfig.from_kwargs so validation and
+            # defaults are exactly the config path's (bit-identical runs are
+            # pinned by tests/test_workloads.py).
+            if config is not None:
+                raise TypeError(
+                    "pass either config=ServingConfig(...) or legacy "
+                    f"keyword arguments, not both (got both config= and "
+                    f"{sorted(legacy_kwargs)})")
+            warnings.warn(
+                "ServingCore(scheduler, backend, prefill_chunk_tokens=..., "
+                "...) is deprecated; pass "
+                "config=ServingConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+            config = ServingConfig.from_kwargs(**legacy_kwargs)
+        self.config = config = config or ServingConfig()
         self.scheduler = scheduler
         self.backend = backend
         self.allocator = allocator or BlockAllocator.unbounded()
         self.clock: Clock = clock or WallClock()
-        self.prefill_chunk_tokens = prefill_chunk_tokens
-        self.record_token_times = record_token_times
-        self.prefix_caching = prefix_caching
-        self.kv_reservation = kv_reservation
+        self.prefill_chunk_tokens = config.prefill_chunk_tokens
+        self.record_token_times = config.record_token_times
+        self.prefix_caching = config.prefix_caching
+        self.kv_reservation = config.kv_reservation
         # Iterative re-ranking cadence: refresh priority keys to predicted
         # *remaining* length every ``rerank_interval`` clock seconds and/or
         # every ``rerank_every_steps`` serving cycles (either one firing
         # triggers a refresh). Off by default — ranks stay write-once.
-        self.rerank_interval = rerank_interval
-        self.rerank_every_steps = rerank_every_steps
-        self.rerank_floor = rerank_floor
-        self._rerank_enabled = (rerank_interval is not None
-                                or rerank_every_steps is not None)
+        self.rerank_interval = config.rerank_interval
+        self.rerank_every_steps = config.rerank_every_steps
+        self.rerank_floor = config.rerank_floor
+        self._rerank_enabled = config.rerank_enabled
         self._steps_since_rerank = 0
         self._last_rerank_t: Optional[float] = None
         if self._rerank_enabled and scheduler.pin_after_demotions is None:
             # starvation bound: re-ranking can demote the same request over
             # and over; pin it boosted after ``rerank_pin_after`` demotions
-            scheduler.pin_after_demotions = rerank_pin_after
+            scheduler.pin_after_demotions = config.rerank_pin_after
         # req_id -> full chunk-hash chain, computed once per residency: the
         # KV gate re-evaluates every waiting request each cycle under
         # back-pressure, and re-tokenizing + re-hashing a long shared prompt
@@ -297,17 +303,16 @@ class ServingCore:
         # service-time estimate, enabling admission-time shedding of
         # unmeetable deadlines. Deadline enforcement itself activates the
         # first time a submitted request carries one.
-        self.deadline_time_per_token = deadline_time_per_token
+        self.deadline_time_per_token = config.deadline_time_per_token
         self._deadlines_seen = False
         self.deadline_cancels = 0
         # Load shedding: sustained-overload detection plus the composed
         # admission gate (below).
-        self.shed_queue_depth = shed_queue_depth
-        self.shed_kv_pressure = shed_kv_pressure
-        self.shed_sustain_steps = shed_sustain_steps
-        self.shed_predicted_tokens = shed_predicted_tokens
-        self._shed_enabled = (shed_queue_depth is not None
-                              or shed_kv_pressure is not None)
+        self.shed_queue_depth = config.shed_queue_depth
+        self.shed_kv_pressure = config.shed_kv_pressure
+        self.shed_sustain_steps = config.shed_sustain_steps
+        self.shed_predicted_tokens = config.shed_predicted_tokens
+        self._shed_enabled = config.shed_enabled
         self._overload_steps = 0
         self._shed_active = False
         self.shed_count = 0
@@ -317,7 +322,7 @@ class ServingCore:
         self._shed_marked: List[Request] = []
         scheduler.admit_hook = self._reserve
         scheduler.evict_hook = self._evict
-        if self._shed_enabled and shed_predicted_tokens is not None:
+        if self._shed_enabled and self.shed_predicted_tokens is not None:
             # runs BEFORE _reserve (gates added later run first), so a shed
             # veto can never leak a KV reservation
             scheduler.add_admit_gate(self._shed_gate)
@@ -635,14 +640,31 @@ class ServingCore:
         self.deadline_cancels += len(expired_r) + len(expired_w)
 
     # ---------------------------------------------------------- load shedding
+    def _shed_victim_key(self, r: Request, now: float) -> Tuple:
+        """Shed-preference ordering; victims are taken from the *end* of a
+        list sorted ascending by this key. Class-aware: a waiting request
+        whose TTFT SLO is already blown sheds first (its tokens can never
+        count toward goodput again), then lower ``Request.priority`` classes
+        before higher, then the scheduler's own rank (worst-ranked last).
+        Without class/SLO annotations every component but the rank is
+        constant, reducing exactly to the historical worst-ranked-tail
+        ordering."""
+        ttft_blown = (r.slo_ttft_s is not None
+                      and r.first_token_time is None
+                      and now - r.arrival_time > r.slo_ttft_s)
+        return (1 if ttft_blown else 0, -r.priority,
+                self.scheduler._sort_key(r))
+
     def _update_shedding(self, now: float) -> None:
         """Sustained-overload detection + tail shedding. Overload = queue
         depth over ``shed_queue_depth`` and/or KV pressure over
         ``shed_kv_pressure`` for ``shed_sustain_steps`` *consecutive* steps
-        (a one-step burst never sheds). While active, the worst-ranked
-        non-boosted waiting requests are shed: down to the queue-depth
-        target when that trigger fired, one per step under pure KV pressure.
-        Boosted (starvation-pinned) requests are never shed."""
+        (a one-step burst never sheds). While active, the least-worth-keeping
+        non-boosted waiting requests are shed (:meth:`_shed_victim_key`:
+        blown-SLO first, then low priority classes, then worst rank): down
+        to the queue-depth target when that trigger fired, one per step
+        under pure KV pressure. Boosted (starvation-pinned) requests are
+        never shed."""
         over_queue = (self.shed_queue_depth is not None
                       and len(self.scheduler.waiting) > self.shed_queue_depth)
         over_kv = (self.shed_kv_pressure is not None
@@ -654,7 +676,7 @@ class ServingCore:
             return
         sheddable = sorted((r for r in self.scheduler.waiting
                             if not r.boosted),
-                           key=self.scheduler._sort_key)
+                           key=lambda r: self._shed_victim_key(r, now))
         if over_queue:
             n = len(self.scheduler.waiting) - self.shed_queue_depth
         else:
@@ -670,8 +692,10 @@ class ServingCore:
         runs before the KV hook reserves anything): while overload shedding
         is active, refuse work predicted longer than
         ``shed_predicted_tokens`` — under overload, admitting a long request
-        delays every queued short one behind it."""
-        if not self._shed_active or req.boosted:
+        delays every queued short one behind it. Class-aware: requests from
+        priority > 0 classes are exempt — their SLO is what shedding exists
+        to protect, so the gate only turns away best-effort traffic."""
+        if not self._shed_active or req.boosted or req.priority > 0:
             return True
         est = self._estimate_len(req)
         if est is not None and est >= self.shed_predicted_tokens:

@@ -79,10 +79,11 @@ from repro.core.predictor.tokenizer import HashTokenizer
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
 from repro.models import transformer as tfm
+from repro.serving.config import ServingConfig, resolve_config
 from repro.serving.core import PrefillChunk, ServingCore, WallClock
 from repro.serving.kv_cache import (UNBOUNDED_BLOCKS, BlockAllocator,
                                     prefix_chunk_hashes)
-from repro.serving.metrics import LatencyReport, report
+from repro.serving.metrics import LatencyReport, RunCounters, report
 from repro.serving.sampler import SamplerConfig, sample
 
 
@@ -850,16 +851,9 @@ class Engine:
                  allocator: Optional[BlockAllocator] = None,
                  sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
                  bucketed: bool = True,
-                 prefill_chunk_tokens: Optional[int] = None,
-                 prefix_caching: bool = False,
                  paged: Optional[bool] = None,
-                 kv_reservation: str = "full",
                  record_tokens: bool = False,
-                 record_token_times: bool = False,
-                 rerank_interval: Optional[float] = None,
-                 rerank_every_steps: Optional[int] = None,
-                 rerank_floor: float = 0.0,
-                 rerank_pin_after: int = 3,
+                 config: Optional[ServingConfig] = None,
                  **core_kw):
         if paged is None:
             # auto: block-structured KV exists exactly for attention-family
@@ -867,6 +861,10 @@ class Engine:
             # historical contiguous path
             paged = (cfg.family in (DENSE, MOE, VLM) and not cfg.is_encdec
                      and not cfg.sliding_window)
+        # core behaviour: config=ServingConfig(...) or loose keywords
+        # (chunking, caching, reservation, re-ranking, deadlines, shedding)
+        # — a blessed translation, no deprecation warning
+        config = resolve_config(config, core_kw)
         s = scheduler.max_batch
         self.scheduler = scheduler
         self.backend = RealBackend(
@@ -877,16 +875,7 @@ class Engine:
         self.allocator = allocator or BlockAllocator(
             total_blocks=s * (-(-cache_len // 16)), block_size=16)
         self.core = ServingCore(scheduler, self.backend,
-                                allocator=self.allocator,
-                                prefill_chunk_tokens=prefill_chunk_tokens,
-                                prefix_caching=prefix_caching,
-                                kv_reservation=kv_reservation,
-                                record_token_times=record_token_times,
-                                rerank_interval=rerank_interval,
-                                rerank_every_steps=rerank_every_steps,
-                                rerank_floor=rerank_floor,
-                                rerank_pin_after=rerank_pin_after,
-                                **core_kw)
+                                allocator=self.allocator, config=config)
 
     # -------------------------------------------------------------------- api
     @property
@@ -917,33 +906,27 @@ def serve(cfg: ModelConfig, params, requests: Sequence[Request], policy, *,
           starvation_threshold: float = 120.0, time_scale: float = 1.0,
           log_every: float = 0.0, bucketed: bool = True,
           kv_blocks: Optional[int] = None,
-          prefill_chunk_tokens: Optional[int] = None,
-          prefix_caching: bool = False,
           paged: Optional[bool] = None,
-          kv_reservation: str = "full",
-          rerank_interval: Optional[float] = None,
-          rerank_every_steps: Optional[int] = None,
+          config: Optional[ServingConfig] = None,
           **core_kw) -> LatencyReport:
-    """Convenience wrapper: fresh engine + scheduler, serve, report. Extra
-    keywords forward to the serving core (deadlines, shedding, …); dropped
-    requests are counted in the report, never silently lost."""
+    """Convenience wrapper: fresh engine + scheduler, serve, report. Core
+    behaviour comes from ``config`` or loose keywords (chunking, caching,
+    reservation mode, re-ranking, deadlines, shedding, …); dropped requests
+    are counted in the report, never silently lost."""
+    config = resolve_config(config, core_kw)
     sched = Scheduler(policy=policy, max_batch=max_batch,
                       starvation_threshold=starvation_threshold)
     allocator = BlockAllocator(kv_blocks, 16) if kv_blocks else None
     eng = Engine(cfg, params, sched, cache_len=cache_len,
                  prompt_len=prompt_len, allocator=allocator,
-                 bucketed=bucketed, prefill_chunk_tokens=prefill_chunk_tokens,
-                 prefix_caching=prefix_caching, paged=paged,
-                 kv_reservation=kv_reservation,
-                 rerank_interval=rerank_interval,
-                 rerank_every_steps=rerank_every_steps,
-                 **core_kw)
+                 bucketed=bucketed, paged=paged, config=config)
     eng.submit(requests)
     finished = eng.run(time_scale=time_scale, log_every=log_every)
     dropped = eng.core.dropped
     assert len(finished) + len(dropped) == len(requests), \
         (len(finished), len(dropped), len(requests))
-    reranked = rerank_interval is not None or rerank_every_steps is not None
     return report(policy.name, finished,
-                  reranks=eng.core.rerank_count if reranked else None,
-                  dropped=dropped if dropped else None)
+                  counters=RunCounters(
+                      reranks=(eng.core.rerank_count
+                               if config.rerank_enabled else None),
+                      dropped=tuple(dropped) if dropped else None))

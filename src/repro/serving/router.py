@@ -84,7 +84,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 from repro.core.scheduler.request import Request, RequestState
 from repro.serving.core import ServingCore
 from repro.serving.faults import ReplicaCrashed
-from repro.serving.metrics import RouterReport, router_report
+from repro.serving.metrics import RouterReport, RunCounters, router_report
 
 ROUTING_POLICIES = ("round_robin", "least_kv_pressure",
                     "predicted_shortest_queue", "prefix_affinity")
@@ -453,20 +453,9 @@ class ReplicaRouter:
 
     def report(self, label: Optional[str] = None) -> RouterReport:
         """Aggregate + per-replica metrics for everything finished so far
-        (NaN-safe when some replica served nothing)."""
-        reranked = any(c._rerank_enabled for c in self.replicas)
-        faulty = (any(self.crash_count) or self._restart_at
-                  or any(c.dropped for c in self.replicas) or self.dropped)
+        (NaN-safe when some replica served nothing). Counter collection
+        lives in :meth:`RunCounters.from_router`, the one place that knows
+        which router layers were active."""
         return router_report(label or self.policy,
                              [core.finished for core in self.replicas],
-                             admit_attempts=self.admit_attempts,
-                             reranks=(sum(c.rerank_count
-                                          for c in self.replicas)
-                                      if reranked else None),
-                             dropped=self.all_dropped if faulty else None,
-                             crashes=(tuple(self.crash_count)
-                                      if faulty else None),
-                             restarts=(tuple(self.restarts)
-                                       if faulty else None),
-                             redispatches=(self.redispatches
-                                           if faulty else None))
+                             counters=RunCounters.from_router(self))

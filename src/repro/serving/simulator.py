@@ -37,9 +37,10 @@ from typing import Callable, List, Optional, Sequence
 from repro.core.predictor.tokenizer import HashTokenizer
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.config import ServingConfig, resolve_config
 from repro.serving.core import PrefillChunk, ServingCore, VirtualClock
 from repro.serving.kv_cache import BlockAllocator
-from repro.serving.metrics import LatencyReport, report
+from repro.serving.metrics import LatencyReport, RunCounters, report
 from repro.serving.router import ReplicaRouter
 
 
@@ -114,19 +115,34 @@ class SimBackend:
         pass                          # no slot residency to free
 
 
+def clone_requests(requests: Sequence[Request]) -> List[Request]:
+    """Fresh lifecycle records for re-running one workload under another
+    policy: workload identity (prompt, lengths, arrival, deadline,
+    tenant/class/SLO annotations) carries over; run state (timestamps,
+    scores, queue flags) resets."""
+    return [Request(r.req_id, r.prompt, r.arrival_time, r.prompt_len,
+                    r.true_length, deadline=r.deadline, tenant=r.tenant,
+                    priority_class=r.priority_class, priority=r.priority,
+                    slo_ttft_s=r.slo_ttft_s, slo_itl_s=r.slo_itl_s)
+            for r in requests]
+
+
 def make_sim_core(scheduler: Scheduler, *, cost: CostModel = CostModel(),
                   kv_blocks: Optional[int] = None, block_size: int = 16,
+                  config: Optional[ServingConfig] = None,
                   **core_kw) -> ServingCore:
     """One fresh simulated serving core: its own allocator (``kv_blocks``
-    bounded, or unbounded), ``SimBackend`` and ``VirtualClock``. Every
-    remaining keyword forwards to :class:`~repro.serving.core.ServingCore`
-    verbatim (chunking, caching, reservation mode, re-ranking cadence,
-    deadlines, shedding, …) — one construction path for every sim entry
-    point, so new core features never need plumbing here again."""
+    bounded, or unbounded), ``SimBackend`` and ``VirtualClock``. Behaviour
+    comes from ``config`` (or equivalently loose core keywords — chunking,
+    caching, reservation mode, re-ranking cadence, deadlines, shedding, …,
+    folded into a :class:`ServingConfig` here) — one construction path for
+    every sim entry point, so new core features never need plumbing here
+    again."""
     allocator = (BlockAllocator(kv_blocks, block_size) if kv_blocks
                  else BlockAllocator.unbounded(block_size))
     return ServingCore(scheduler, SimBackend(cost), allocator=allocator,
-                       clock=VirtualClock(), **core_kw)
+                       clock=VirtualClock(),
+                       config=resolve_config(config, core_kw))
 
 
 def simulate(requests: Sequence[Request], scheduler: Scheduler, *,
@@ -224,29 +240,37 @@ def run_policy(requests: Sequence[Request], policy, *, max_batch: int = 16,
                starvation_threshold: float = 120.0,
                preemption: bool = False, max_preemptions: int = 2,
                kv_blocks: Optional[int] = None,
+               config: Optional[ServingConfig] = None,
                rerank_interval: Optional[float] = None,
                rerank_every_steps: Optional[int] = None,
                **core_kw) -> LatencyReport:
-    """Convenience: fresh scheduler + simulate + report. Extra keywords
-    forward to the core (chunking, caching, reservation mode, deadlines,
-    shedding); a fault-configured run's dropped requests are counted in the
-    report, never silently lost (conservation is asserted)."""
-    # deep-ish copy so one policy run doesn't pollute another (deadlines
-    # carry over — they are part of the workload, not run state)
-    reqs = [Request(r.req_id, r.prompt, r.arrival_time, r.prompt_len,
-                    r.true_length, deadline=r.deadline) for r in requests]
+    """Convenience: fresh scheduler + simulate + report. Core behaviour
+    comes from ``config`` or loose keywords (chunking, caching, reservation
+    mode, deadlines, shedding); a fault-configured run's dropped requests
+    are counted in the report, never silently lost (conservation is
+    asserted)."""
+    if config is None:
+        config = ServingConfig.from_kwargs(rerank_interval=rerank_interval,
+                                           rerank_every_steps=
+                                           rerank_every_steps, **core_kw)
+    elif (core_kw or rerank_interval is not None
+          or rerank_every_steps is not None):
+        raise TypeError("pass either config=ServingConfig(...) or loose "
+                        "core keywords, not both")
+    # deep-ish copy so one policy run doesn't pollute another (deadlines and
+    # class/SLO annotations carry over — they are workload, not run state)
+    reqs = clone_requests(requests)
     sched = Scheduler(policy=policy, max_batch=max_batch,
                       continuous=continuous,
                       starvation_threshold=starvation_threshold,
                       preemption=preemption, max_preemptions=max_preemptions)
-    core = make_sim_core(sched, cost=cost, kv_blocks=kv_blocks,
-                         rerank_interval=rerank_interval,
-                         rerank_every_steps=rerank_every_steps, **core_kw)
+    core = make_sim_core(sched, cost=cost, kv_blocks=kv_blocks, config=config)
     core.submit(reqs)
     finished = core.run()
     assert len(finished) + len(core.dropped) == len(requests), \
         (len(finished), len(core.dropped), len(requests))
-    reranked = rerank_interval is not None or rerank_every_steps is not None
     return report(policy.name, finished,
-                  reranks=sched.rerank_count if reranked else None,
-                  dropped=core.dropped if core.dropped else None)
+                  counters=RunCounters(
+                      reranks=(sched.rerank_count if config.rerank_enabled
+                               else None),
+                      dropped=tuple(core.dropped) if core.dropped else None))

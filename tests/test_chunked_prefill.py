@@ -12,7 +12,8 @@ import pytest
 from repro.core.scheduler.policies import fcfs, oracle_sjf
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
-from repro.serving import ServingCore, VirtualClock, itl_samples
+from repro.serving import (ServingConfig, ServingCore, VirtualClock,
+                           itl_samples)
 from repro.serving.simulator import CostModel, SimBackend, simulate
 
 
@@ -28,7 +29,7 @@ def test_plan_chunks_packs_whole_fits_and_head_of_line_partial():
     whole are skipped, keeping dispatch shapes bounded."""
     sched = Scheduler(policy=fcfs(), max_batch=8)
     core = ServingCore(sched, SimBackend(_cost()), clock=VirtualClock(),
-                       prefill_chunk_tokens=64)
+                       config=ServingConfig(prefill_chunk_tokens=64))
     reqs = [Request(0, "a", 0.0, 16, 4), Request(1, "b", 0.0, 16, 4),
             Request(2, "c", 0.0, 100, 4), Request(3, "d", 0.0, 32, 4)]
     sched.add_requests(reqs)
@@ -56,8 +57,7 @@ def test_plan_without_budget_is_prefill_to_completion():
 
 def test_invalid_chunk_budget_rejected():
     with pytest.raises(ValueError):
-        ServingCore(Scheduler(policy=fcfs()), SimBackend(), clock=VirtualClock(),
-                    prefill_chunk_tokens=0)
+        ServingConfig(prefill_chunk_tokens=0)
 
 
 # ---------------------------------------------- mixed steps (deterministic)
@@ -127,7 +127,7 @@ def test_half_prefilled_requests_do_not_decode():
     sched = Scheduler(policy=fcfs(), max_batch=4)
     clock = VirtualClock()
     core = ServingCore(sched, SimBackend(_cost()), clock=clock,
-                       prefill_chunk_tokens=50)
+                       config=ServingConfig(prefill_chunk_tokens=50))
     sched.add_requests([Request(0, "long", 0.0, 500, 3),
                         Request(1, "co", 0.0, 10, 2)])
     for _ in range(3):                           # a few mixed steps
@@ -145,7 +145,7 @@ def test_kv_reservation_is_full_demand_at_admission():
     from repro.serving import BlockAllocator
     alloc = BlockAllocator(total_blocks=1000, block_size=16)
     core = ServingCore(sched, backend, allocator=alloc, clock=VirtualClock(),
-                       prefill_chunk_tokens=32)
+                       config=ServingConfig(prefill_chunk_tokens=32))
     req = Request(0, "long", 0.0, 320, 16)       # (320+16)/16 = 21 blocks
     sched.add_requests([req])
     core.step(0.0)

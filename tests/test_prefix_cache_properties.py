@@ -28,7 +28,7 @@ from _hypothesis_compat import given, st
 from repro.core.scheduler.policies import fcfs
 from repro.core.scheduler.request import Request
 from repro.core.scheduler.scheduler import Scheduler
-from repro.serving import ServingCore, VirtualClock
+from repro.serving import ServingConfig, ServingCore, VirtualClock
 from repro.serving.kv_cache import BlockAllocator, prefix_chunk_hashes
 from repro.serving.simulator import CostModel, SimBackend
 
@@ -189,9 +189,10 @@ def test_served_workloads_release_every_block(n, shared_words, budget, chunk,
     alloc = BlockAllocator(total_blocks=budget, block_size=16)
     sched = Scheduler(policy=fcfs(), max_batch=4)
     core = ServingCore(sched, SimBackend(CostModel()), allocator=alloc,
-                       clock=VirtualClock(), prefill_chunk_tokens=chunk,
-                       prefix_caching=True,
-                       kv_reservation="incremental" if incremental else "full")
+                       clock=VirtualClock(), config=ServingConfig(
+                           prefill_chunk_tokens=chunk, prefix_caching=True,
+                           kv_reservation="incremental" if incremental
+                           else "full"))
     core.submit(reqs)
     finished = core.run()
     assert len(finished) == n

@@ -1,0 +1,367 @@
+"""Workload harness + ServingConfig API (ISSUE 10): trace determinism,
+conversation-prefix cache churn, hand-computed SLO attainment, config
+round-trips, config-vs-legacy-kwargs bit-identical runs, and RunCounters
+legacy-kwarg equivalence."""
+import dataclasses
+import math
+import warnings
+
+import pytest
+
+from repro.core.scheduler.policies import fcfs
+from repro.core.scheduler.request import Request, RequestState
+from repro.core.scheduler.scheduler import Scheduler
+from repro.serving.config import ServingConfig, resolve_config
+from repro.serving.core import ServingCore, VirtualClock
+from repro.serving.kv_cache import BlockAllocator, prefix_chunk_hashes
+from repro.serving.metrics import (RunCounters, meets_itl, meets_ttft,
+                                   report, router_report, slo_report)
+from repro.serving.simulator import (CostModel, SimBackend, clone_requests,
+                                     make_sim_core)
+from repro.serving.workloads import (SLO, ArrivalPhase, ConversationSpec,
+                                     OutputDist, PriorityClass, TenantSpec,
+                                     WorkloadSpec, generate_trace,
+                                     trace_summary)
+
+
+def _conv_spec(seed: int = 3) -> WorkloadSpec:
+    """Single-tenant, always-continue 3-turn conversations: every
+    conversation's turn t+1 prompt extends its turn t prompt."""
+    return WorkloadSpec(
+        tenants=(TenantSpec(
+            name="chat",
+            phases=(ArrivalPhase(rate_per_s=0.6, duration_s=20.0),),
+            classes=(PriorityClass("interactive",
+                                   slo=SLO(ttft_s=1.0, itl_s=0.25),
+                                   priority=1),),
+            outputs=OutputDist(median_tokens=8, sigma=0.2),
+            conversation=ConversationSpec(max_turns=3, p_continue=1.0,
+                                          think_time_s=0.5, turn_words=8,
+                                          echo_cap_words=16),
+            system_words=64),),
+        duration_s=20.0, seed=seed)
+
+
+def _two_tenant_spec(seed: int = 0) -> WorkloadSpec:
+    return WorkloadSpec(
+        tenants=(
+            TenantSpec(name="a",
+                       phases=(ArrivalPhase(2.0, 3.0),
+                               ArrivalPhase(0.2, 3.0)),
+                       classes=(PriorityClass("gold", slo=SLO(ttft_s=0.5),
+                                              priority=1, weight=1.0),
+                                PriorityClass("free", weight=2.0)),
+                       outputs=OutputDist(median_tokens=12, sigma=0.4)),
+            TenantSpec(name="b",
+                       phases=(ArrivalPhase(1.0, 6.0),),
+                       outputs=OutputDist(median_tokens=40, sigma=0.6,
+                                          long_frac=0.2, long_scale=4.0)),
+        ),
+        duration_s=12.0, seed=seed)
+
+
+# ------------------------------------------------------- trace determinism
+def test_trace_is_a_pure_function_of_the_spec():
+    a = generate_trace(_two_tenant_spec(seed=0))
+    b = generate_trace(_two_tenant_spec(seed=0))
+    assert len(a) == len(b) > 0
+    for ra, rb in zip(a, b):
+        assert (ra.req_id, ra.prompt, ra.arrival_time, ra.prompt_len,
+                ra.true_length, ra.tenant, ra.priority_class, ra.priority,
+                ra.slo_ttft_s, ra.slo_itl_s) == \
+               (rb.req_id, rb.prompt, rb.arrival_time, rb.prompt_len,
+                rb.true_length, rb.tenant, rb.priority_class, rb.priority,
+                rb.slo_ttft_s, rb.slo_itl_s)
+    # a different seed is a different trace
+    c = generate_trace(_two_tenant_spec(seed=1))
+    assert [r.prompt for r in c] != [r.prompt for r in a]
+
+
+def test_trace_shape_and_annotations():
+    trace = generate_trace(_two_tenant_spec())
+    assert all(trace[i].arrival_time <= trace[i + 1].arrival_time
+               for i in range(len(trace) - 1))
+    assert [r.req_id for r in trace] == list(range(len(trace)))
+    # prompt_len convention: 1 (CLS) + whitespace words
+    assert all(r.prompt_len == 1 + len(r.prompt.split()) for r in trace)
+    tenants = {r.tenant for r in trace}
+    assert tenants == {"a", "b"}
+    gold = [r for r in trace if r.priority_class == "gold"]
+    assert gold and all(r.slo_ttft_s == 0.5 and r.priority == 1
+                        for r in gold)
+    # tenant b's default class carries no SLO -> schedules as before
+    assert all(r.slo_ttft_s is None and r.priority == 0
+               for r in trace if r.tenant == "b")
+    summ = trace_summary(trace)
+    assert summ["n_requests"] == len(trace)
+    assert set(summ["per_tenant"]) == {"a", "b"}
+
+
+# ------------------------------------------- conversation prefix cache hits
+def test_conversation_turns_chain_hash_to_shared_prefixes():
+    trace = generate_trace(_conv_spec())
+    by_prompt = sorted(trace, key=lambda r: r.arrival_time)
+    chains = 0
+    for a in by_prompt:
+        ext = [b for b in by_prompt
+               if b is not a and b.prompt.startswith(a.prompt + " ")]
+        for b in ext:
+            # whole-block chunk hashes of the shorter prompt are a prefix
+            # of the longer one's chain — exactly what the KV prefix cache
+            # keys sharing on
+            ta = [0] + [hash(w) for w in a.prompt.split()]
+            tb = [0] + [hash(w) for w in b.prompt.split()]
+            ha, hb = (prefix_chunk_hashes(t, 16) for t in (ta, tb))
+            assert hb[:len(ha)] == ha and len(ha) >= 4
+            chains += 1
+    assert chains > 0, "no multi-turn conversation in the window"
+
+
+def test_conversation_trace_produces_real_prefix_cache_hits():
+    trace = generate_trace(_conv_spec())
+    sched = Scheduler(policy=fcfs(), max_batch=8)
+    core = make_sim_core(sched, kv_blocks=4096,
+                         config=ServingConfig(prefix_caching=True))
+    core.submit(clone_requests(trace))
+    fin = core.run()
+    assert len(fin) == len(trace)
+    # every non-first request shares at least the tenant's 64-word system
+    # prompt with an earlier one; committed-prefix sharing must kick in
+    hits = [r for r in fin if (r.cached_prefix_tokens or 0) > 0]
+    assert len(hits) >= len(fin) // 2
+    # later turns reuse more than the system prompt: their cached prefix
+    # covers the previous turn's whole prompt (minus the partial block)
+    ext = {b.req_id: a for a in trace for b in trace
+           if b.prompt.startswith(a.prompt + " ")}
+    deep = [r for r in fin if r.req_id in ext
+            and (r.cached_prefix_tokens or 0)
+            >= ext[r.req_id].prompt_len - 16]
+    assert deep, "no turn reused its conversation's previous-turn prefix"
+
+
+# -------------------------------------------------- hand-computed SLO math
+def _req(i, *, arrival=0.0, out=10, first=None, finish=None,
+         state=RequestState.FINISHED, cls=None, tenant=None, prio=0,
+         ttft=None, itl=None, token_times=()):
+    r = Request(i, f"p{i}", arrival, 4, out, tenant=tenant,
+                priority_class=cls, priority=prio, slo_ttft_s=ttft,
+                slo_itl_s=itl)
+    r.state = state
+    r.first_token_time, r.finish_time = first, finish
+    r.token_times.extend(token_times)
+    return r
+
+
+def test_meets_ttft_hand_cases():
+    assert meets_ttft(_req(0, first=0.5)) is None            # no SLO
+    assert meets_ttft(_req(1, ttft=1.0, first=0.5)) is True
+    assert meets_ttft(_req(2, ttft=1.0, first=2.0)) is False
+    assert meets_ttft(_req(3, ttft=1.0, first=None,
+                           state=RequestState.SHED)) is False
+
+
+def test_meets_itl_hand_cases():
+    assert meets_itl(_req(0, first=1.0, finish=2.0)) is None  # no SLO
+    assert meets_itl(_req(1, itl=0.1, state=RequestState.SHED)) is False
+    assert meets_itl(_req(2, itl=0.1, out=1, first=1.0, finish=1.0)) is True
+    # recorded token times: gaps (0.1, 0.2) -> mean 0.15
+    r = _req(3, itl=0.2, out=3, first=1.0, finish=1.3,
+             token_times=(1.0, 1.1, 1.3))
+    assert meets_itl(r) is True
+    assert meets_itl(_req(4, itl=0.1, out=3, first=1.0, finish=1.3,
+                          token_times=(1.0, 1.1, 1.3))) is False
+    # no token times: (finish - first) / (n - 1) = 0.9 / 9 = 0.1
+    assert meets_itl(_req(5, itl=0.1, out=10, first=1.0,
+                          finish=1.9)) is True
+    assert meets_itl(_req(6, itl=0.09, out=10, first=1.0,
+                          finish=1.9)) is False
+
+
+def test_slo_report_hand_computed_fixture():
+    gold = dict(cls="gold", tenant="a", prio=1, ttft=1.0)
+    fin = [
+        _req(0, first=0.5, finish=2.0, out=10, **gold),   # meets
+        _req(1, first=3.0, finish=4.0, out=10, **gold),   # TTFT miss
+        _req(3, first=1.0, finish=5.0, out=20,
+             cls="free", tenant="b"),                     # no SLO
+    ]
+    dropped = [_req(2, state=RequestState.SHED, out=10, **gold)]
+    s = slo_report("x", fin, dropped)
+
+    assert (s.n_requests, s.n_finished, s.n_dropped) == (4, 3, 1)
+    assert s.makespan_s == pytest.approx(5.0)
+    g = s.cls("gold")
+    assert (g.n_requests, g.n_finished, g.n_dropped) == (3, 2, 1)
+    assert g.priority == 1
+    assert g.ttft_attainment == pytest.approx(1 / 3)      # drop = miss
+    assert g.slo_attainment == pytest.approx(1 / 3)
+    assert math.isnan(g.itl_attainment)                   # no ITL SLO
+    assert g.goodput_tok_s == pytest.approx(10 / 5.0)     # only req 0
+    assert g.throughput_tok_s == pytest.approx(20 / 5.0)
+    f = s.cls("free")
+    assert math.isnan(f.slo_attainment)                   # NaN-when-absent
+    assert f.goodput_tok_s == pytest.approx(20 / 5.0)     # nothing to violate
+    assert s.slo_attainment == pytest.approx(1 / 3)       # over gold only
+    assert s.goodput_tok_s == pytest.approx((10 + 20) / 5.0)
+    assert s.throughput_tok_s == pytest.approx((10 + 20 + 10) / 5.0)
+    assert {t.name for t in s.per_tenant} == {"a", "b"}
+    with pytest.raises(KeyError):
+        s.cls("nope")
+
+
+def test_slo_report_empty_run_is_all_nan():
+    s = slo_report("x", [], [])
+    assert s.n_requests == 0
+    assert math.isnan(s.slo_attainment) and math.isnan(s.goodput_tok_s)
+
+
+# ----------------------------------------------- ServingConfig round trips
+def test_config_round_trip_and_defaults():
+    cfg = ServingConfig(prefill_chunk_tokens=64, prefix_caching=True,
+                        rerank_every_steps=4, shed_queue_depth=32)
+    assert ServingConfig.from_kwargs(**cfg.to_kwargs()) == cfg
+    assert ServingConfig.from_kwargs(**ServingConfig().to_kwargs()) \
+        == ServingConfig()
+    assert cfg.rerank_enabled and cfg.shed_enabled
+    assert not ServingConfig().rerank_enabled
+    assert not ServingConfig().shed_enabled
+    assert cfg.replace(rerank_every_steps=None) \
+        == ServingConfig(prefill_chunk_tokens=64, prefix_caching=True,
+                         shed_queue_depth=32)
+
+
+@pytest.mark.parametrize("bad", [
+    dict(prefill_chunk_tokens=0),
+    dict(kv_reservation="bogus"),
+    dict(rerank_interval=-1.0),
+    dict(rerank_every_steps=0),
+    dict(rerank_pin_after=-1),
+    dict(deadline_time_per_token=-0.1),
+    dict(shed_queue_depth=-1),
+    dict(shed_kv_pressure=1.5),
+    dict(shed_sustain_steps=0),
+    dict(shed_predicted_tokens=0),
+])
+def test_config_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        ServingConfig(**bad)
+    with pytest.raises(ValueError):
+        ServingConfig().replace(**bad)          # replace re-validates
+
+
+def test_config_unknown_field_names_the_offender():
+    with pytest.raises(TypeError, match="prefil_chunk_tokens"):
+        ServingConfig.from_kwargs(prefil_chunk_tokens=64)
+
+
+def test_resolve_config_rejects_both_forms():
+    cfg = ServingConfig(prefix_caching=True)
+    assert resolve_config(cfg, {}) is cfg
+    assert resolve_config(None, {"prefix_caching": True}) == cfg
+    with pytest.raises(TypeError, match="not both"):
+        resolve_config(cfg, {"prefix_caching": True})
+
+
+# -------------------------------------- legacy kwargs: bit-identical runs
+def _sig(fin):
+    return sorted((r.req_id, r.start_time, r.first_token_time,
+                   r.finish_time, r.cached_prefix_tokens) for r in fin)
+
+
+def test_legacy_core_kwargs_run_bit_identical_to_config():
+    trace = generate_trace(_conv_spec())
+    cfg = ServingConfig(prefix_caching=True, prefill_chunk_tokens=32,
+                        record_token_times=True)
+
+    via_config = make_sim_core(Scheduler(policy=fcfs(), max_batch=4),
+                               kv_blocks=512, config=cfg)
+    via_config.submit(clone_requests(trace))
+    a = _sig(via_config.run())
+
+    with pytest.warns(DeprecationWarning, match="ServingConfig"):
+        legacy = ServingCore(Scheduler(policy=fcfs(), max_batch=4),
+                             SimBackend(CostModel()),
+                             allocator=BlockAllocator(512, 16),
+                             clock=VirtualClock(), **cfg.to_kwargs())
+    assert legacy.config == cfg           # the shim built the same config
+    legacy.submit(clone_requests(trace))
+    b = _sig(legacy.run())
+
+    assert a == b, "legacy kwargs and config= must be the same run"
+
+
+def test_core_rejects_config_plus_legacy_kwargs():
+    with pytest.raises(TypeError, match="not both"):
+        ServingCore(Scheduler(policy=fcfs(), max_batch=4),
+                    SimBackend(CostModel()), clock=VirtualClock(),
+                    config=ServingConfig(), prefix_caching=True)
+
+
+def test_blessed_helpers_do_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        core = make_sim_core(Scheduler(policy=fcfs(), max_batch=4),
+                             kv_blocks=64, prefix_caching=True)
+    assert core.config.prefix_caching
+
+
+# ------------------------------------------- RunCounters legacy equivalence
+def _eq_nan(a, b):
+    """Structural equality where NaN == NaN (reports use NaN for absent)."""
+    if isinstance(a, float) and isinstance(b, float):
+        return (math.isnan(a) and math.isnan(b)) or a == b
+    if dataclasses.is_dataclass(a):
+        return type(a) is type(b) and all(
+            _eq_nan(getattr(a, f.name), getattr(b, f.name))
+            for f in dataclasses.fields(a))
+    if isinstance(a, (tuple, list)):
+        return len(a) == len(b) and all(map(_eq_nan, a, b))
+    return a == b
+
+
+def _tiny_finished():
+    return [_req(0, first=0.2, finish=1.0, out=5),
+            _req(1, arrival=0.1, first=0.4, finish=2.0, out=8)]
+
+
+def test_report_counters_bundle_equals_legacy_kwargs():
+    fin = _tiny_finished()
+    dropped = (_req(2, state=RequestState.SHED),)
+    legacy = report("p", fin, reranks=7, dropped=dropped,
+                    scorer_failures=2, degradations=1, recoveries=1)
+    bundled = report("p", fin, counters=RunCounters(
+        reranks=7, dropped=dropped, scorer_failures=2, degradations=1,
+        recoveries=1))
+    assert _eq_nan(legacy, bundled)
+    # both forms at once is an API misuse, not a silent merge
+    with pytest.raises(TypeError, match="not both"):
+        report("p", fin, counters=RunCounters(reranks=7), reranks=7)
+
+
+def test_router_report_counters_bundle_equals_legacy_kwargs():
+    per_replica = [_tiny_finished(), []]
+    legacy = router_report("rr", per_replica, admit_attempts=(3, 1),
+                           crashes=(1, 0), restarts=(1, 0), redispatches=2)
+    bundled = router_report("rr", per_replica, counters=RunCounters(
+        admit_attempts=(3, 1), crashes=(1, 0), restarts=(1, 0),
+        redispatches=2))
+    assert _eq_nan(legacy, bundled)
+    with pytest.raises(TypeError, match="not both"):
+        router_report("rr", per_replica, admit_attempts=(3, 1),
+                      counters=RunCounters(admit_attempts=(3, 1)))
+
+
+def test_runcounters_from_core_reflects_config():
+    sched = Scheduler(policy=fcfs(), max_batch=4)
+    core = make_sim_core(sched, kv_blocks=64,
+                         config=ServingConfig(rerank_every_steps=2))
+    core.submit([Request(0, "a b c", 0.0, 4, 3)])
+    core.run()
+    c = RunCounters.from_core(core)
+    assert c.reranks is not None          # rerank layer was on -> counted
+    assert c.dropped is None              # no fault layer -> NaN convention
+    plain = make_sim_core(Scheduler(policy=fcfs(), max_batch=4),
+                          kv_blocks=64)
+    plain.submit([Request(0, "a b c", 0.0, 4, 3)])
+    plain.run()
+    assert RunCounters.from_core(plain).reranks is None
